@@ -1,0 +1,68 @@
+"""Paper Table VI — estimation-function reliability, measured by *rank*.
+
+Protocol (paper §VI-D): take the N random-setting baseline runs; the true
+completion times give the oracle ranking. For every setting, segment its
+trace into windows of ``a`` iterations, fit the §IV estimator per segment,
+and compute the estimated remaining time. At each segment boundary, the
+setting whose estimate is lowest is the "estimated optimal"; its rank in the
+oracle is the quality measure. We report the average rank over all segment
+boundaries (1 = the estimator would always pick the true best setting).
+"""
+from __future__ import annotations
+
+import random as _random
+
+import numpy as np
+
+from benchmarks.common import run_fixed, save_artifact
+from benchmarks.workloads import WORKLOADS, paper_knob_space
+from repro.core.progress import estimate_remaining_time
+
+CAPS = {"logr": (2000, 40.0), "svm": (2000, 40.0), "cnn": (1200, 90.0)}
+
+
+def run(n_settings: int = 10, a: int = 8, workloads=("logr", "svm", "cnn"),
+        seed: int = 0, emit=print):
+    space = paper_knob_space()
+    rows = []
+    for wl in workloads:
+        job = WORKLOADS[wl](seed=0)
+        max_iters, max_s = CAPS[wl]
+        rng = _random.Random(seed + 1)
+        runs = []
+        for i in range(n_settings):
+            setting = space.sample(rng)
+            r = run_fixed(job, setting, max_iters, max_s, seed=seed,
+                          record_trace=True)
+            r["setting"] = setting
+            runs.append(r)
+        # oracle ranking by true completion time (non-converged last)
+        truth = [(r["wall_s"] if r["converged"] else 1e9 + i, i)
+                 for i, r in enumerate(runs)]
+        order = [i for _, i in sorted(truth)]
+        oracle_rank = {i: order.index(i) + 1 for i in range(len(runs))}
+
+        # per-segment estimates for every run
+        n_seg = min(len(r["trace"]) // a for r in runs)
+        ranks = []
+        for s in range(1, n_seg):
+            est = []
+            for i, r in enumerate(runs):
+                seg = r["trace"][(s - 1) * a: s * a + 1]
+                iters = [p[0] for p in seg]
+                losses = [p[2] for p in seg]
+                times = [r["t_per_iter"]] * len(seg)
+                e = estimate_remaining_time(iters, losses, times, job.eps)
+                est.append(e["Y"])
+            best_est = int(np.argmin([y if np.isfinite(y) else 1e18
+                                      for y in est]))
+            ranks.append(oracle_rank[best_est])
+        avg_rank = float(np.mean(ranks)) if ranks else float("nan")
+        emit(f"table6,{wl},avg_rank,{avg_rank:.2f}")
+        emit(f"table6,{wl},n_settings,{len(runs)}")
+        emit(f"table6,{wl},n_segments,{len(ranks)}")
+        rows.append({"workload": wl, "avg_rank": avg_rank,
+                     "n_settings": len(runs), "segments": len(ranks),
+                     "ranks": ranks})
+    save_artifact("table6_estimation.json", rows)
+    return rows

@@ -1,0 +1,78 @@
+"""Paper Table V — reconfiguration cost: ODMR scheme vs baseline
+checkpoint+restore.
+
+Type I-b (model relocation): ODMR realizes the relocation as resharding
+carried by the runtime (device_put under the new specs / the next step's
+out_shardings), while the baseline is the full CKP (host serialize to disk)
++ SSR + MDR (restore + re-place) sequence. Type II (knob-only): ODMR swaps
+the pre-compiled executable; the baseline restarts the job state through the
+same checkpoint cycle (what TF without Reconfig() must do).
+
+Single-process CPU measures the host/disk costs exactly; the multi-device
+resharding variant of ODMR runs in examples/elastic_reshard.py (8 forced
+host devices).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_artifact
+from benchmarks.workloads import DEFAULT_SETTING, WORKLOADS
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.distributed.sharding import single_device_meshspec, param_specs
+from repro.ps.odmr import relocate_now
+
+
+def _measure_baseline(state, tmpdir, template):
+    """CKP + (SSR) + MDR: serialize to disk, read back, re-place."""
+    t0 = time.perf_counter()
+    save_pytree(state, tmpdir, step=0)
+    restored, _ = restore_pytree(template, tmpdir, step=0)
+    jax.block_until_ready(restored)
+    return time.perf_counter() - t0
+
+
+def _measure_odmr(state, ms):
+    """Relocation piggybacked on the runtime — here: re-place in device
+    memory under the (new) specs; no host round-trip, no quiescence."""
+    specs = param_specs(state, ms)
+    t0 = time.perf_counter()
+    out = relocate_now(state, specs, ms)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run(n_reconfigs: int = 10, workloads=("logr", "svm", "cnn"), emit=print):
+    ms = single_device_meshspec()
+    rows = []
+    for wl in workloads:
+        job = WORKLOADS[wl](seed=0)
+        state = job.init_state(DEFAULT_SETTING)
+        template = jax.tree_util.tree_map(np.asarray, state)
+        tmpdir = tempfile.mkdtemp(prefix=f"stps_ckpt_{wl}_")
+        try:
+            base = [_measure_baseline(state, tmpdir, template)
+                    for _ in range(n_reconfigs)]
+            odmr = [_measure_odmr(state, ms) for _ in range(n_reconfigs)]
+        finally:
+            shutil.rmtree(tmpdir, ignore_errors=True)
+        b_tot, o_tot = float(np.sum(base)), float(np.sum(odmr))
+        b_avg, o_avg = float(np.mean(base)), float(np.mean(odmr))
+        emit(f"table5,{wl},n_reconfigs,{n_reconfigs}")
+        emit(f"table5,{wl},baseline_total_s,{b_tot:.4f}")
+        emit(f"table5,{wl},stps_total_s,{o_tot:.4f}")
+        emit(f"table5,{wl},baseline_per_reconfig_s,{b_avg:.4f}")
+        emit(f"table5,{wl},stps_per_reconfig_s,{o_avg:.4f}")
+        emit(f"table5,{wl},reduction_x,{b_avg / max(o_avg, 1e-9):.1f}")
+        rows.append({"workload": wl, "n": n_reconfigs,
+                     "baseline_total_s": b_tot, "odmr_total_s": o_tot,
+                     "baseline_avg_s": b_avg, "odmr_avg_s": o_avg})
+    save_artifact("table5_reconfig.json", rows)
+    return rows

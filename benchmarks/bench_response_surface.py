@@ -1,0 +1,35 @@
+"""Paper Fig. 1 + Fig. 2 — the response surface is complex/non-monotonic, and
+one knob (workers, the server:worker-ratio analogue) already trades hardware
+efficiency against statistical efficiency.
+
+Fig. 1 analogue: completion time over the (workers x microbatches) grid.
+Fig. 2 analogue: iterations-to-eps as a function of workers (statistical
+efficiency degradation under ASP staleness).
+"""
+from __future__ import annotations
+
+from benchmarks.common import run_fixed, save_artifact
+from benchmarks.workloads import DEFAULT_SETTING, WORKLOADS
+
+
+def run(workload: str = "cnn", emit=print):
+    job = WORKLOADS[workload](seed=0)
+    grid = []
+    for w in (1, 2, 4, 8):
+        for mb in (1, 2, 4, 8):
+            s = {**DEFAULT_SETTING, "workers": w, "microbatches": mb}
+            r = run_fixed(job, s, max_iters=1500, max_seconds=90.0)
+            grid.append({"workers": w, "microbatches": mb,
+                         "wall_s": r["wall_s"], "iters": r["iters"],
+                         "t_per_iter": r["t_per_iter"],
+                         "converged": r["converged"]})
+            emit(f"fig1,{workload},w{w}_mb{mb},wall_s={r['wall_s']:.2f},"
+                 f"iters={r['iters']}")
+    # Fig. 2: statistical efficiency vs workers
+    for w in (1, 2, 4, 8):
+        s = {**DEFAULT_SETTING, "workers": w}
+        r = run_fixed(job, s, max_iters=1500, max_seconds=90.0)
+        emit(f"fig2,{workload},workers={w},iters_to_eps={r['iters']},"
+             f"t_per_iter_ms={1000*r['t_per_iter']:.2f}")
+    save_artifact(f"fig1_surface_{workload}.json", grid)
+    return grid

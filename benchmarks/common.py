@@ -1,0 +1,70 @@
+"""Shared benchmark protocol: fixed-setting runs and tuned runs."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../artifacts/bench")
+
+
+def run_fixed(job, setting, max_iters: int = 4000, max_seconds: float = 120.0,
+              seed: int = 0, record_trace: bool = False):
+    """Run one workload under one frozen setting until rolling-mean(8) <= eps.
+    Returns dict(iters, wall_s, t_per_iter, converged, trace?)."""
+    state = job.init_state(setting, seed)
+    step = jax.jit(job.step_builder(setting))
+    bi = job.batches(seed)
+    batch = next(bi)
+    # warm-up compile outside the measured window (SSR cost is measured
+    # separately in bench_reconfig)
+    state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    losses = [float(m["loss"])]
+    it = 1
+    t0 = time.perf_counter()
+    trace = []
+    while it < max_iters:
+        batch = next(bi)
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        it += 1
+        if record_trace:
+            trace.append((it, time.perf_counter() - t0, losses[-1]))
+        if len(losses) >= 8 and np.mean(losses[-8:]) <= job.eps:
+            break
+        if time.perf_counter() - t0 > max_seconds:
+            break
+    wall = time.perf_counter() - t0
+    conv = bool(len(losses) >= 8 and np.mean(losses[-8:]) <= job.eps)
+    out = {"iters": it, "wall_s": wall, "t_per_iter": wall / max(it, 1),
+           "converged": conv, "final_loss": float(np.mean(losses[-8:]))}
+    if record_trace:
+        out["trace"] = trace
+    return out
+
+
+def run_tuned(job, space, x0, a: int = 10, b: int = 8, seed: int = 0,
+              max_iters: int = 4000, use_odmr: bool = True):
+    import jax.numpy as jnp
+
+    from repro.core.tuner import TunerConfig, TuningManager
+    from repro.ps.trainer import SelfTuningLoop, make_staleness_adapter
+
+    tuner = TuningManager(space, x0, TunerConfig(
+        eps=job.eps, a=a, b=b, seed=seed, use_odmr=use_odmr))
+    adapter = make_staleness_adapter(jnp.float32, knob="workers",
+                                     depth=lambda v: v - 1, default=1)
+    loop = SelfTuningLoop(tuner, job.step_builder, adapter)
+    state = job.init_state(tuner.current, seed)
+    res, _ = loop.run(state, job.batches(seed), max_iters=max_iters)
+    return res, tuner
+
+
+def save_artifact(name: str, payload):
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, name), "w") as f:
+        json.dump(payload, f, indent=1, default=str)

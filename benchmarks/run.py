@@ -1,0 +1,56 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,<fields>`` CSV lines. Default sizes finish on a single CPU in
+~10-20 minutes; ``--quick`` shrinks the random-baseline pools (CI-sized),
+``--full`` widens them toward the paper's 100-setting protocol.
+
+  fig1/fig2   response surface + statistical-vs-hardware efficiency
+  fig5/table3 end-to-end completion time vs Worst/Average/Best + decomposition
+  table5      reconfiguration cost: ODMR vs checkpoint+restore baseline
+  table6      progress-estimator rank quality vs the oracle
+  roofline    per-(arch x shape x mesh) terms from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: surface,completion,reconfig,"
+                         "estimation,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    n_random = 6 if args.quick else (24 if args.full else 12)
+    n_est = 6 if args.quick else (16 if args.full else 10)
+
+    def want(name):
+        return only is None or name in only
+
+    t0 = time.time()
+    print("bench,field,value")
+    if want("roofline"):
+        from benchmarks import roofline_report
+        roofline_report.run()
+    if want("reconfig"):
+        from benchmarks import bench_reconfig
+        bench_reconfig.run()
+    if want("surface"):
+        from benchmarks import bench_response_surface
+        bench_response_surface.run("cnn")
+    if want("estimation"):
+        from benchmarks import bench_estimation
+        bench_estimation.run(n_settings=n_est)
+    if want("completion"):
+        from benchmarks import bench_completion
+        bench_completion.run(n_random=n_random)
+    print(f"total,seconds,{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""The paper's evaluation workloads (Table II analogues) as STPS jobs.
+
+LogR (l2-regularized logistic regression), SVM (hinge), CNN (small convnet)
+on deterministic synthetic data — each exposes init_state / step_builder /
+batches and shares the knob space below. All three run to a loss threshold
+eps on CPU in seconds, which is what makes the paper's 100-random-settings
+baseline protocol reproducible here.
+
+Knobs (system parameters only — batch size & lr are hyperparameters and
+fixed): microbatches (grad-accumulation schedule), staleness (delayed-
+gradient ASP: the server:worker-ratio statistical-efficiency effect, paper
+Fig. 2), compression (push precision, paper's bfloat16_sendrecv), and
+compute_dtype (op precision placement).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import Knob, KnobSpace
+from repro.data.synthetic import image_dataset, regression_dataset
+from repro.ps.compression import compress_grads
+
+
+def paper_knob_space() -> KnobSpace:
+    return KnobSpace((
+        Knob("workers", "ordinal", (1, 2, 4, 8, 16)),
+        Knob("microbatches", "ordinal", (1, 2, 4, 8, 16)),
+        Knob("compression", "nominal", ("none", "bf16", "int8")),
+        Knob("compute_dtype", "nominal", ("f32", "bf16")),
+    ))
+
+
+DEFAULT_SETTING = {"workers": 1, "microbatches": 1,
+                   "compression": "none", "compute_dtype": "f32"}
+
+
+class _GDJob:
+    """Shared machinery: full-batch-of-minibatches gradient descent with the
+    knob-driven execution schedule."""
+
+    lr = 0.5
+    l2 = 1e-4
+    batch = 256
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.X, self.y = self._data(seed)
+        self.n = len(self.y)
+
+    # --- to be provided by subclasses
+    def _data(self, seed):
+        raise NotImplementedError
+
+    def init_params(self, seed: int = 0):
+        raise NotImplementedError
+
+    def loss(self, params, xb, yb, dtype):
+        raise NotImplementedError
+
+    # --- shared
+    def batches(self, seed: int = 0):
+        rng = np.random.default_rng(seed + 1)
+        while True:
+            idx = rng.integers(0, self.n, self.batch)
+            yield {"x": self.X[idx], "y": self.y[idx]}
+
+    def init_state(self, setting, seed: int = 0):
+        params = self.init_params(seed)
+        state = {"params": params, "step": jnp.zeros((), jnp.int32)}
+        w = setting.get("workers", 1)
+        if w > 1:
+            state["grad_queue"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros((w - 1,) + p.shape, p.dtype), params)
+        return state
+
+    def step_builder(self, setting):
+        """ASP semantics (paper §II-B / Fig. 2): with ``workers`` = w, each
+        iteration is ONE worker's push — computed on a 1/w sub-batch (more
+        updates per unit compute: hardware efficiency up) against parameters
+        that are w-1 pushes old (staleness: statistical efficiency down)."""
+        w = setting.get("workers", 1)
+        mb = setting.get("microbatches", 1)
+        comp = setting.get("compression", "none")
+        dtype = (jnp.float32 if setting.get("compute_dtype", "f32") == "f32"
+                 else jnp.bfloat16)
+
+        def loss_fn(params, xb, yb):
+            return self.loss(params, xb, yb, dtype)
+
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        def compute(params, xb, yb):
+            if mb == 1 or xb.shape[0] % mb:
+                return grad_fn(params, xb, yb)
+            xs = xb.reshape((mb, xb.shape[0] // mb) + xb.shape[1:])
+            ys = yb.reshape((mb, yb.shape[0] // mb) + yb.shape[1:])
+
+            def micro(carry, b):
+                tot, acc = carry
+                l, g = grad_fn(params, b[0], b[1])
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (tot + l, acc), None
+
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+            (tot, g), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros), (xs, ys))
+            return tot / mb, jax.tree_util.tree_map(lambda x: x / mb, g)
+
+        def step(state, batch):
+            params = state["params"]
+            xb, yb = batch["x"], batch["y"]
+            if w > 1:                        # this worker's sub-batch
+                n = xb.shape[0] // w
+                wid = jnp.mod(state["step"], w)
+                xb = jax.lax.dynamic_slice_in_dim(xb, wid * n, n, 0)
+                yb = jax.lax.dynamic_slice_in_dim(yb, wid * n, n, 0)
+            loss, grads = compute(params, xb, yb)
+            grads = compress_grads(grads, comp, state["step"])
+            if w > 1:                        # apply the stalest pushed grad
+                q = state["grad_queue"]
+                delayed = jax.tree_util.tree_map(lambda t: t[0], q)
+                new_q = jax.tree_util.tree_map(
+                    lambda t, g: jnp.concatenate(
+                        [t[1:], g[None].astype(t.dtype)]), q, grads)
+                warm = state["step"] >= (w - 1)
+                grads = jax.tree_util.tree_map(
+                    lambda d, g: jnp.where(warm, d, g), delayed, grads)
+            new_params = jax.tree_util.tree_map(
+                lambda p, g: p - self.lr * g.astype(p.dtype), params, grads)
+            new_state = {"params": new_params, "step": state["step"] + 1}
+            if w > 1:
+                new_state["grad_queue"] = new_q
+            return new_state, {"loss": loss.astype(jnp.float32)}
+
+        return step
+
+
+class LogRJob(_GDJob):
+    """l2-regularized logistic regression (KDD12 analogue)."""
+    eps = 0.50
+    lr = 0.6
+
+    def _data(self, seed):
+        return regression_dataset(n=8192, d=256, seed=seed, task="logreg",
+                                  noise=1.0, cond=64.0)
+
+    def init_params(self, seed: int = 0):
+        return {"w": jnp.zeros((self.X.shape[1],), jnp.float32),
+                "b": jnp.zeros((), jnp.float32)}
+
+    def loss(self, params, xb, yb, dtype):
+        w = params["w"].astype(dtype)
+        logits = (xb.astype(dtype) @ w).astype(jnp.float32) + params["b"]
+        bce = jnp.mean(jnp.logaddexp(0.0, logits) - yb * logits)
+        return bce + self.l2 * jnp.sum(params["w"] ** 2)
+
+
+class SVMJob(_GDJob):
+    """Linear SVM with hinge loss (CRITEO analogue)."""
+    eps = 0.53
+    lr = 0.25
+
+    def _data(self, seed):
+        return regression_dataset(n=8192, d=256, seed=seed, task="svm",
+                                  noise=1.0, cond=64.0)
+
+    def init_params(self, seed: int = 0):
+        return {"w": jnp.zeros((self.X.shape[1],), jnp.float32),
+                "b": jnp.zeros((), jnp.float32)}
+
+    def loss(self, params, xb, yb, dtype):
+        w = params["w"].astype(dtype)
+        f = (xb.astype(dtype) @ w).astype(jnp.float32) + params["b"]
+        hinge = jnp.mean(jnp.maximum(0.0, 1.0 - yb * f))
+        return hinge + self.l2 * jnp.sum(params["w"] ** 2)
+
+
+class CNNJob(_GDJob):
+    """Small convnet on synthetic images (CIFAR/AlexNet analogue —
+    non-convex, so the Hogwild!-bound estimator is a heuristic here,
+    exactly as in the paper §IV-B)."""
+    eps = 0.70
+    lr = 0.015
+    batch = 128
+
+    def _data(self, seed):
+        return image_dataset(n=4096, hw=16, n_classes=10, seed=seed,
+                             noise=1.6)
+
+    def init_params(self, seed: int = 0):
+        k = jax.random.split(jax.random.PRNGKey(seed), 4)
+        he = jax.nn.initializers.he_normal()
+        return {
+            "c1": he(k[0], (3, 3, 3, 16), jnp.float32),
+            "c2": he(k[1], (3, 3, 16, 32), jnp.float32),
+            "d1": he(k[2], (8 * 8 * 32 // 4, 64), jnp.float32),
+            "d2": he(k[3], (64, 10), jnp.float32),
+        }
+
+    def loss(self, params, xb, yb, dtype):
+        x = xb.astype(dtype)
+
+        def conv(x, w):
+            return jax.lax.conv_general_dilated(
+                x, w.astype(dtype), (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+        x = jax.nn.relu(conv(x, params["c1"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = jax.nn.relu(conv(x, params["c2"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                  (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["d1"].astype(dtype))
+        logits = (x @ params["d2"].astype(dtype)).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+        return nll
+
+
+WORKLOADS = {"logr": LogRJob, "svm": SVMJob, "cnn": CNNJob}

@@ -1,0 +1,40 @@
+"""Quickstart: self-tuning a PS-style training job in ~40 lines.
+
+Runs the paper's LogR workload under the online tuner: initialization phase
+(default setting + b random settings), then online BO-driven reconfiguration
+until the loss threshold is reached.
+
+  PYTHONPATH=src:. python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from benchmarks.workloads import DEFAULT_SETTING, LogRJob, paper_knob_space
+from repro.core.tuner import TunerConfig, TuningManager
+from repro.ps.trainer import SelfTuningLoop, make_staleness_adapter
+
+
+def main():
+    job = LogRJob(seed=0)
+    space = paper_knob_space()
+    tuner = TuningManager(space, DEFAULT_SETTING, TunerConfig(
+        eps=job.eps, a=40, b=8, seed=0))
+    adapter = make_staleness_adapter(jnp.float32, knob="workers",
+                                     depth=lambda v: v - 1, default=1)
+    loop = SelfTuningLoop(tuner, job.step_builder, adapter)
+
+    state = job.init_state(DEFAULT_SETTING)
+    result, _ = loop.run(state, job.batches(), max_iters=12000, verbose=True)
+
+    print("\n=== self-tuning result ===")
+    print(f"converged:        {result.converged}")
+    print(f"iterations:       {result.iterations}")
+    print(f"wall time:        {result.wall_time_s:.1f}s "
+          f"(reconfig overhead {result.reconfig_total_s:.1f}s)")
+    print(f"final setting:    {tuner.current}")
+    print(f"settings tried:   {len(tuner.repo.settings)}")
+    rep = tuner.progress_report()
+    print(f"progress report:  loss={rep['loss']:.4f} phase={rep['phase']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""End-to-end driver: train a transformer LM with the self-tuning PS runtime.
+
+Default: a ~100M-parameter dense LM (starcoder2-family geometry) trained for
+a few hundred steps on the synthetic next-token stream, with the online
+tuner choosing among Type II settings (remat / microbatches / compression /
+staleness / k_chunk). Use --small for a CI-sized run.
+
+  PYTHONPATH=src:. python examples/selftune_train.py [--small] [--steps N]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--eps", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.registry import STARCODER2_3B
+    from repro.core.tuner import TunerConfig, TuningManager
+    from repro.ps.lm_job import DEFAULT_LM_SETTING, LMJob, lm_knob_space
+    from repro.ps.trainer import SelfTuningLoop
+
+    if args.small:
+        cfg = STARCODER2_3B.reduced(name="lm-small")
+        steps = args.steps or 120
+        batch, seq = 4, 64
+        eps = args.eps or 3.0
+        a, b = 8, 4
+    else:
+        # ~100M params: 12 layers x d=768, GQA 12/4 heads, vocab 32k
+        cfg = dataclasses.replace(
+            STARCODER2_3B, name="lm-100m", n_layers=12, d_model=768,
+            n_heads=12, n_kv_heads=4, head_dim=64, d_ff=3072,
+            vocab_size=32768)
+        steps = args.steps or 300
+        batch, seq = 4, 256
+        eps = args.eps or 4.0
+        a, b = 10, 5
+
+    job = LMJob(cfg, batch=batch, seq=seq, seed=args.seed)
+    job.eps = eps
+    print(f"model={cfg.name} params={cfg.n_params():,} steps<={steps} "
+          f"eps={eps}", flush=True)
+
+    space = lm_knob_space(len(jax.devices()))
+    tuner = TuningManager(space, DEFAULT_LM_SETTING,
+                          TunerConfig(eps=eps, a=a, b=b, seed=args.seed))
+    loop = SelfTuningLoop(tuner, job.step_builder, job.state_adapter)
+    state = job.init_state(DEFAULT_LM_SETTING, args.seed)
+    res, state = loop.run(state, job.batches(args.seed), max_iters=steps,
+                          verbose=True)
+    print(f"\ndone: iters={res.iterations} wall={res.wall_time_s:.1f}s "
+          f"final_ce={res.final_loss:.3f} converged={res.converged}")
+    print(f"final setting: {tuner.current}")
+    print(f"windows observed: {len(tuner.history)}; "
+          f"reconfigs: {len(tuner.repo.reconfig_events)} "
+          f"({res.reconfig_total_s:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

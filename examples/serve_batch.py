@@ -1,0 +1,30 @@
+"""Batched serving example: prefill a batch of prompts, then decode tokens
+with a shared KV cache — the serving path whose full-scale plans the
+multi-pod dry-run validates (decode_32k / long_500k cells).
+
+  PYTHONPATH=src:. python examples/serve_batch.py [--arch starcoder2-3b]
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    # The serving driver lives in the launch layer; this example simply runs
+    # it on the reduced config (CPU-sized).
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", args.arch, "--reduced",
+           "--batch", str(args.batch),
+           "--prompt-len", str(args.prompt_len),
+           "--gen", str(args.gen)]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import (CheckpointManager, save_pytree,
+                                   restore_pytree, latest_step)
+
+__all__ = ["CheckpointManager", "save_pytree", "restore_pytree", "latest_step"]

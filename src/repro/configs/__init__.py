@@ -1,0 +1,8 @@
+from repro.configs.base import (ModelConfig, ShapeConfig, TrainConfig,
+                                ALL_SHAPES, SHAPES_BY_NAME, applicable_shapes,
+                                TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+from repro.configs.registry import ARCHS, get_config
+
+__all__ = ["ModelConfig", "ShapeConfig", "TrainConfig", "ALL_SHAPES",
+           "SHAPES_BY_NAME", "applicable_shapes", "ARCHS", "get_config",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K"]

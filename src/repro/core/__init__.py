@@ -1,0 +1,27 @@
+"""The paper's primary contribution: online self-tuning for PS-style systems.
+
+knobs     — system-setting space (paper §III, Table I analogue)
+metrics   — per-iteration metrics repository + outlier removal (Fig. 4)
+progress  — online statistical-progress estimation (§IV, Eq. 3-5)
+gp / bo   — loss-aware Gaussian-process BO with EI acquisition (§III-A)
+reconfig  — reconfiguration taxonomy + cost model (§V)
+tuner     — the Tuning Manager state machine (§III-B/C)
+"""
+from repro.core.knobs import Knob, KnobSpace, default_ps_knob_space, setting_key
+from repro.core.gp import GaussianProcess
+from repro.core.bo import LossAwareBO, expected_improvement
+from repro.core.progress import (FittedProgress, fit_progress,
+                                 estimate_remaining_time)
+from repro.core.metrics import MetricsRepository, remove_outliers
+from repro.core.reconfig import (ReconfigCostModel, ReconfigPlan, classify,
+                                 plan)
+from repro.core.tuner import TunerConfig, TuningManager
+
+__all__ = [
+    "Knob", "KnobSpace", "default_ps_knob_space", "setting_key",
+    "GaussianProcess", "LossAwareBO", "expected_improvement",
+    "FittedProgress", "fit_progress", "estimate_remaining_time",
+    "MetricsRepository", "remove_outliers",
+    "ReconfigCostModel", "ReconfigPlan", "classify", "plan",
+    "TunerConfig", "TuningManager",
+]

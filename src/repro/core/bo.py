@@ -1,0 +1,122 @@
+"""Loss-aware Bayesian optimization with Expected Improvement (paper §III).
+
+The GP input is the (d+1)-dim vector <encode(X), log-loss>: adding the model
+loss to the input space lets the same setting be valued differently early vs
+late in training (the paper's key subtlety vs. conventional offline BO). The
+target is log(Y) — log remaining time — so EI in log space prefers
+multiplicative improvements and tolerates the heavy-tailed noise of Y.
+"""
+from __future__ import annotations
+
+import math
+import random as _random
+
+import numpy as np
+
+from repro.core.gp import GaussianProcess
+from repro.core.knobs import KnobSpace
+
+
+def _phi(z):
+    return math.exp(-0.5 * z * z) / math.sqrt(2 * math.pi)
+
+
+def _Phi(z):
+    return 0.5 * (1.0 + math.erf(z / math.sqrt(2.0)))
+
+
+def expected_improvement(mu, sigma, best):
+    """EI for *minimization*: E[max(best - f, 0)]."""
+    out = np.zeros_like(mu)
+    for i, (m, s) in enumerate(zip(mu, sigma)):
+        if s <= 1e-12:
+            out[i] = max(best - m, 0.0)
+            continue
+        z = (best - m) / s
+        out[i] = (best - m) * _Phi(z) + s * _phi(z)
+    return out
+
+
+class LossAwareBO:
+    def __init__(self, space: KnobSpace, seed: int = 0,
+                 candidate_pool: int = 64, max_obs: int = 64):
+        self.space = space
+        self.rng = _random.Random(seed)
+        self.candidate_pool = candidate_pool
+        self.max_obs = max_obs               # sliding window over observations
+        self.X: list[list[float]] = []       # encoded <setting, log-loss>
+        self.y: list[float] = []             # log remaining time
+        self.records: list[tuple[dict, float, float]] = []
+        self.gp: GaussianProcess | None = None
+        self._fits = 0
+
+    # ------------------------------------------------------------- observe
+    def observe(self, setting: dict, loss: float, Y: float):
+        """Add one training triple <X_i, l_i, Y_i> (paper Fig. 4b)."""
+        if not np.isfinite(Y) or Y <= 0:
+            Y = 1e9                           # diverged windows: huge time
+        x = self.space.encode(setting) + [self._loss_feat(loss)]
+        self.X.append(x)
+        self.y.append(math.log(Y))
+        self.records.append((dict(setting), loss, Y))
+        if len(self.y) > self.max_obs:        # sliding window: recent windows
+            self.X = self.X[-self.max_obs:]   # match the current loss regime
+            self.y = self.y[-self.max_obs:]
+            self.records = self.records[-self.max_obs:]
+        self.gp = None                        # refit lazily
+
+    @staticmethod
+    def _loss_feat(loss: float) -> float:
+        return math.log(max(loss, 1e-9))
+
+    def _ensure_fit(self):
+        if self.gp is None and len(self.y) >= 2:
+            self._fits += 1
+            # hyperparameter grid search is amortized over refits
+            opt = (self._fits <= 2) or (self._fits % 5 == 0)
+            self.gp = GaussianProcess().fit(np.asarray(self.X),
+                                            np.asarray(self.y), optimize=opt)
+
+    # ------------------------------------------------------------- suggest
+    def suggest(self, current_loss: float, current_setting: dict | None = None,
+                explored=None):
+        """Returns (setting X', expected_improvement_in_seconds, mu_best).
+
+        EI is converted back from log space to seconds so the caller can
+        compare it against R_cost (paper §III-C).
+        """
+        if len(self.y) < 2:
+            return self.space.sample(self.rng), float("inf"), float("inf")
+        self._ensure_fit()
+
+        cands = self.space.enumerate_all(limit=self.candidate_pool)
+        if cands is None:
+            cands = [self.space.sample(self.rng)
+                     for _ in range(self.candidate_pool)]
+            if current_setting is not None:
+                cands += self.space.neighbors(current_setting, self.rng, 16)
+            cands += [dict(s) for s, _, _ in self.records[-8:]]
+        lf = self._loss_feat(current_loss)
+        Xc = np.asarray([self.space.encode(c) + [lf] for c in cands])
+        mu, sigma = self.gp.predict(Xc)
+
+        # current best: GP posterior at the observed settings, at current loss
+        Xb = np.asarray([self.space.encode(s) + [lf]
+                         for s, _, _ in self.records])
+        mu_b, _ = self.gp.predict(Xb)
+        best = float(np.min(mu_b))
+
+        ei_log = expected_improvement(mu, sigma, best)
+        i = int(np.argmax(ei_log))
+        # convert log-EI to seconds: best_time * (1 - exp(-EI_log)) approx
+        best_seconds = math.exp(best)
+        ei_seconds = best_seconds * (1.0 - math.exp(-float(ei_log[i])))
+        return cands[i], ei_seconds, best_seconds
+
+    def predicted_Y(self, setting: dict, loss: float) -> float:
+        if len(self.y) < 2:
+            return float("inf")
+        self._ensure_fit()
+        mu, _ = self.gp.predict(
+            np.asarray([self.space.encode(setting) + [self._loss_feat(loss)]]))
+        return float(math.exp(mu[0]))

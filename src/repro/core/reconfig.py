@@ -1,0 +1,79 @@
+"""Online reconfiguration planning & cost model (paper §V).
+
+A reconfiguration from setting X to X' is classified into the paper's types:
+
+  Type I-a  training-data relocation    (data-axis / input-pipeline changes)
+  Type I-b  model-data relocation       (parameter placement: mesh_split)
+  Type II   system-setting only         (recompiled step: remat, chunking,
+                                         compression, microbatches, ...)
+
+For each type the executor can use the *baseline* (checkpoint + restore:
+CKP + SSR + MDR + TDR) or the efficient scheme (paper's mix-and-match):
+TDR for I-a, ODMR for I-b (repro.ps.odmr — reshard-on-step), plain SSR
+(executable swap) for II. ``ReconfigCostModel`` keeps a running per-type
+average of *observed* costs, seeded during the initialization phase, which is
+what the online phase compares EI against (paper §III-C).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+MESH_KNOBS = ("mesh_split",)                     # Type I-b
+DATA_KNOBS = ("data_shards",)                    # Type I-a
+# everything else is Type II
+
+
+def classify(old: dict, new: dict) -> tuple[str, ...]:
+    kinds = set()
+    for k in new:
+        if old.get(k) == new[k]:
+            continue
+        if k in MESH_KNOBS:
+            kinds.add("I-b")
+        elif k in DATA_KNOBS:
+            kinds.add("I-a")
+        else:
+            kinds.add("II")
+    return tuple(sorted(kinds))
+
+
+@dataclass
+class ReconfigCostModel:
+    """Running average of observed reconfiguration costs per type."""
+    totals: dict = field(default_factory=dict)
+    counts: dict = field(default_factory=dict)
+    default_cost_s: float = 1.0
+
+    def observe(self, kinds: tuple, cost_s: float):
+        for k in kinds or ("II",):
+            self.totals[k] = self.totals.get(k, 0.0) + cost_s / max(len(kinds), 1)
+            self.counts[k] = self.counts.get(k, 0) + 1
+
+    def estimate(self, kinds: tuple) -> float:
+        if not kinds:
+            return 0.0
+        tot = 0.0
+        for k in kinds:
+            if self.counts.get(k):
+                tot += self.totals[k] / self.counts[k]
+            else:
+                tot += self.default_cost_s
+        return tot
+
+
+@dataclass(frozen=True)
+class ReconfigPlan:
+    kinds: tuple
+    old: dict
+    new: dict
+    method: str          # "odmr" | "baseline"
+
+    @property
+    def needs_relocation(self) -> bool:
+        return "I-b" in self.kinds or "I-a" in self.kinds
+
+
+def plan(old: dict, new: dict, use_odmr: bool = True) -> ReconfigPlan:
+    kinds = classify(old, new)
+    return ReconfigPlan(kinds=kinds, old=dict(old), new=dict(new),
+                        method="odmr" if use_odmr else "baseline")

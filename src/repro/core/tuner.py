@@ -1,0 +1,159 @@
+"""Tuning Manager — the paper's online optimization framework (§III, Fig. 3).
+
+Lifecycle (phases exactly as §III-B/C):
+  1. initialization: run X0 for ``a`` iterations, then ``b`` random settings
+     for ``a`` iterations each (a = 3 x workers by the paper's rule);
+  2. online tuning: every ``a`` iterations, fit the loss-aware GP, pick X'
+     by EI, and reconfigure iff EI > R_cost.
+
+The manager is system-agnostic: a driver (repro.ps.trainer, or the simulated
+job used by benchmarks) pushes per-iteration metrics in and executes the
+ReconfigPlans the manager emits, reporting observed reconfiguration costs
+back. It also exposes ``progress_report`` — the remaining-time progress
+indicator (paper §VII claims the first such indicator for ML systems).
+"""
+from __future__ import annotations
+
+import random as _random
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import reconfig as rc
+from repro.core.bo import LossAwareBO
+from repro.core.knobs import KnobSpace, setting_key
+from repro.core.metrics import MetricsRepository
+from repro.core.progress import estimate_remaining_time, fit_progress
+
+
+@dataclass
+class TunerConfig:
+    eps: float                     # convergence threshold on the loss
+    a: int = 0                     # iters per setting window (0 = 3*workers)
+    b: int = 10                    # random settings in the init phase
+    n_workers: int = 1
+    seed: int = 0
+    use_odmr: bool = True
+    min_ei_seconds: float = 0.0    # extra hysteresis on top of R_cost
+    ei_rel_threshold: float = 0.05 # EI must also exceed this x best-remaining
+    converge_window: int = 8       # rolling-mean window for the eps test
+
+
+class TuningManager:
+    def __init__(self, space: KnobSpace, x0: dict, cfg: TunerConfig):
+        self.space = space
+        self.cfg = cfg
+        self.a = cfg.a or max(2, 3 * cfg.n_workers)
+        self.rng = _random.Random(cfg.seed)
+        self.bo = LossAwareBO(space, seed=cfg.seed)
+        self.repo = MetricsRepository()
+        self.costs = rc.ReconfigCostModel()
+        self.x0 = dict(x0)
+        self.current = dict(x0)
+        self._init_queue = [self.space.sample(self.rng) for _ in range(cfg.b)]
+        self._window_count = 0
+        self._iter = 0
+        self._next_boundary = self.a
+        self._a_scale = 1          # adaptive stretch once the tuner is stable
+        self._start_loss = float("inf")
+        self.phase = "init"
+        self.repo.begin_window(self.current, float("inf"))
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------ metrics in
+    def record_iteration(self, loss: float, time_s: float):
+        self._iter += 1
+        self.repo.add(self._iter, time_s, float(loss))
+
+    def record_reconfig(self, plan: rc.ReconfigPlan, cost_s: float):
+        self.costs.observe(plan.kinds, cost_s)
+        self.repo.add_reconfig(plan.kinds, cost_s, plan.method)
+
+    @property
+    def converged(self) -> bool:
+        if len(self.repo.records) < self.cfg.converge_window:
+            return False
+        return self.repo.rolling_loss(self.cfg.converge_window) <= self.cfg.eps
+
+    # --------------------------------------------------------- window close
+    def _close_window(self):
+        w = self.repo.windows_list[-1]
+        if len(w.iters) < 2:
+            return
+        its, losses, times = self.repo.clean_window(w)
+        est = estimate_remaining_time(its, losses, times, self.cfg.eps)
+        start_loss = losses[0]
+        self.bo.observe(w.setting, start_loss, est["Y"])
+        self.history.append({
+            "window": self._window_count, "setting": dict(w.setting),
+            "start_loss": start_loss, "Y": est["Y"],
+            "t_bar": est["t_bar"],
+            "remaining_iters": est["remaining_iters"],
+            "phase": self.phase,
+        })
+
+    # ------------------------------------------------------------- stepping
+    def maybe_advance(self):
+        """Call after each iteration. Returns a ReconfigPlan when the system
+        should switch settings (the driver executes it and reports cost)."""
+        if self._iter < self._next_boundary:
+            return None
+        self._close_window()
+        self._window_count += 1
+
+        if self._init_queue:
+            nxt = self._init_queue.pop(0)
+            plan = rc.plan(self.current, nxt, self.cfg.use_odmr)
+            self._switch_to(nxt)
+            self._next_boundary = self._iter + self.a
+            return plan
+        if self.phase == "init":
+            self.phase = "online"
+
+        # ---- online tuning phase (§III-C)
+        cur_loss = max(self.repo.latest_loss, self.cfg.eps * 1e-3)
+        x_new, ei_s, best_s = self.bo.suggest(cur_loss, self.current)
+        stay = setting_key(x_new) == setting_key(self.current)
+        if not stay:
+            plan = rc.plan(self.current, x_new, self.cfg.use_odmr)
+            r_cost = self.costs.estimate(plan.kinds)
+            # hysteresis: noisy Y observations inflate EI; require the
+            # improvement to also be a meaningful fraction of the predicted
+            # remaining time before paying a reconfiguration
+            rel = (self.cfg.ei_rel_threshold * best_s
+                   if best_s not in (float("inf"),) else 0.0)
+            stay = ei_s <= r_cost + self.cfg.min_ei_seconds + rel
+            if not stay:
+                self._switch_to(x_new)
+                self._a_scale = 1
+                self._next_boundary = self._iter + self.a
+                return plan
+        # staying put: stretch the window (less BO overhead once stable,
+        # back to `a` after any switch)
+        self._a_scale = min(self._a_scale * 2, 16)
+        self._reopen_window()
+        self._next_boundary = self._iter + self.a * self._a_scale
+        return None
+
+    def _switch_to(self, setting: dict):
+        self.current = dict(setting)
+        self.repo.begin_window(self.current, self.repo.latest_loss)
+
+    def _reopen_window(self):
+        self.repo.begin_window(self.current, self.repo.latest_loss)
+
+    # ------------------------------------------------------- progress report
+    def progress_report(self) -> dict:
+        """Remaining-time estimate under the current setting (progress bar)."""
+        w = self.repo.windows_list[-1]
+        if len(w.iters) >= 2:
+            its, losses, times = self.repo.clean_window(w)
+            est = estimate_remaining_time(its, losses, times, self.cfg.eps)
+            return {"iteration": self._iter, "loss": self.repo.latest_loss,
+                    "remaining_iters": est["remaining_iters"],
+                    "remaining_time_s": est["Y"], "phase": self.phase,
+                    "setting": dict(self.current)}
+        return {"iteration": self._iter, "loss": self.repo.latest_loss,
+                "remaining_iters": float("inf"),
+                "remaining_time_s": float("inf"), "phase": self.phase,
+                "setting": dict(self.current)}

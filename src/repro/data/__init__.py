@@ -1,0 +1,6 @@
+from repro.data.synthetic import (input_specs, synthetic_batch,
+                                  lm_batch_iterator, regression_dataset,
+                                  image_dataset)
+
+__all__ = ["input_specs", "synthetic_batch", "lm_batch_iterator",
+           "regression_dataset", "image_dataset"]

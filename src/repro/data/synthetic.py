@@ -1,0 +1,135 @@
+"""Deterministic synthetic data pipelines.
+
+``input_specs`` is the dry-run entry point: ShapeDtypeStruct stand-ins for
+every model input of a given (arch, shape) cell — weak-type-correct,
+shardable, and allocation-free. ``synthetic_batch`` / ``lm_batch_iterator``
+materialize real (small) batches for smoke tests and CPU training runs.
+``regression_dataset`` / ``image_dataset`` feed the paper-workload analogues
+(LogR / SVM / CNN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend == "patch":
+        return seq_len - cfg.frontend_len
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for one cell (no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "frame":
+            return {"frontend": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                                     jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32),
+                 "labels": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32)}
+        if cfg.frontend == "patch":
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "frame":
+            return {"frontend": jax.ShapeDtypeStruct((B, S, cfg.frontend_dim),
+                                                     jnp.bfloat16)}
+        batch = {"tokens": jax.ShapeDtypeStruct((B, _text_len(cfg, S)), i32)}
+        if cfg.frontend == "patch":
+            batch["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of length S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+            "cache": lm.init_cache_shapes(cfg, B, S)}
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Materialize one real batch matching ``input_specs`` (small cells)."""
+    specs = input_specs(cfg, shape)
+    rng = np.random.default_rng(seed)
+
+    def fill(s):
+        if s.dtype == jnp.int32:
+            hi = cfg.vocab_size if s.shape[-1] != 1 or len(s.shape) == 2 else 1
+            return jnp.asarray(
+                rng.integers(0, max(2, min(cfg.vocab_size, 1 << 30)), s.shape),
+                jnp.int32)
+        return jnp.asarray(rng.standard_normal(s.shape), jnp.float32).astype(s.dtype)
+
+    out = jax.tree_util.tree_map(fill, specs)
+    if "pos" in out:
+        out["pos"] = jnp.full((shape.global_batch,), shape.seq_len - 1, jnp.int32)
+    if "cache" in out:
+        out["cache"] = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            lm.init_cache_shapes(cfg, shape.global_batch, shape.seq_len))
+    return out
+
+
+def lm_batch_iterator(cfg: ModelConfig, batch: int, seq: int, seed: int = 0,
+                      sharding=None):
+    """Infinite deterministic LM batch stream with next-token labels.
+
+    Uses a fixed-order Markov-ish token source so that loss genuinely
+    decreases under training (tokens are learnable, not iid noise).
+    """
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    table = rng.integers(0, V, size=(V,))          # deterministic successor map
+    while True:
+        start = rng.integers(0, V, size=(batch, 1))
+        toks = [start]
+        for _ in range(seq):
+            nxt = table[toks[-1]]
+            flip = rng.random((batch, 1)) < 0.1    # 10% noise
+            rnd = rng.integers(0, V, size=(batch, 1))
+            toks.append(np.where(flip, rnd, nxt))
+        arr = np.concatenate(toks, axis=1)         # (B, seq+1)
+        b = {"tokens": jnp.asarray(arr[:, :-1], jnp.int32),
+             "labels": jnp.asarray(arr[:, 1:], jnp.int32)}
+        if sharding is not None:
+            b = jax.tree_util.tree_map(lambda x: jax.device_put(x, sharding), b)
+        yield b
+
+
+def regression_dataset(n: int = 4096, d: int = 64, seed: int = 0,
+                       task: str = "logreg", noise: float = 0.3,
+                       cond: float = 1.0):
+    """Synthetic convex workloads matching the paper's LogR / SVM jobs.
+
+    ``cond`` > 1 gives the features a geometric spectrum (ill-conditioning),
+    which is what makes GD genuinely *long-running* as in the paper's jobs.
+    """
+    rng = np.random.default_rng(seed)
+    w_true = rng.standard_normal(d) / np.sqrt(d)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    if cond > 1.0:
+        scales = (1.0 / cond) ** (np.arange(d) / max(d - 1, 1))
+        X = (X * scales[None, :]).astype(np.float32)
+        w_true = w_true / scales
+    margin = X @ w_true + noise * rng.standard_normal(n)
+    y = (margin > 0).astype(np.float32) * 2.0 - 1.0          # ±1 labels
+    if task == "logreg":
+        y = (y + 1.0) / 2.0                                   # {0,1}
+    return jnp.asarray(X), jnp.asarray(y.astype(np.float32))
+
+
+def image_dataset(n: int = 2048, hw: int = 16, n_classes: int = 10,
+                  seed: int = 0, noise: float = 0.8):
+    """Tiny synthetic image classification set (the paper's CNN analogue)."""
+    rng = np.random.default_rng(seed)
+    protos = rng.standard_normal((n_classes, hw, hw, 3)).astype(np.float32)
+    labels = rng.integers(0, n_classes, size=n)
+    imgs = protos[labels] + noise * rng.standard_normal(
+        (n, hw, hw, 3)).astype(np.float32)
+    return jnp.asarray(imgs), jnp.asarray(labels.astype(np.int32))

@@ -1,0 +1,144 @@
+"""Roofline-term extraction from a compiled SPMD executable.
+
+``cost_analysis()`` supplies per-device HLO FLOPs / bytes-accessed (verified
+per-device on the CPU backend). Collective bytes are parsed from the
+SPMD-partitioned HLO text: shapes there are per-device, so summed collective
+bytes are per-device too. Convention (documented in EXPERIMENTS.md):
+  all-gather / all-reduce / all-to-all / collective-permute -> result bytes
+  reduce-scatter                                            -> result bytes x group
+Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI
+per chip-link.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved, keyed by collective op kind."""
+    out = {k: 0 for k in _COLL}
+    counts = {k: 0 for k in _COLL}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group(3) == "-done":        # avoid double counting async pairs
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_text)
+        if kind == "reduce-scatter":
+            g = _GROUPS_RE.search(line)
+            if g:
+                nbytes *= int(g.group(2))
+            else:
+                gl = _GROUPS_LIST_RE.search(line)
+                if gl:
+                    nbytes *= len(gl.group(1).split(","))
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL)
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_device: float
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float     # max-term bound / sum-of-terms lower bound
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(flops_per_device: float, bytes_per_device: float,
+                   coll_bytes_per_device: float,
+                   model_flops_per_device: float) -> Roofline:
+    ct = flops_per_device / PEAK_FLOPS
+    mt = bytes_per_device / HBM_BW
+    xt = coll_bytes_per_device / ICI_BW
+    terms = {"compute": ct, "memory": mt, "collective": xt}
+    bottleneck = max(terms, key=terms.get)
+    dominant = terms[bottleneck]
+    # fraction of roofline if terms overlap perfectly: useful compute time
+    # over the dominant term.
+    model_ct = model_flops_per_device / PEAK_FLOPS
+    frac = model_ct / dominant if dominant > 0 else 0.0
+    return Roofline(
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        coll_bytes_per_device=coll_bytes_per_device,
+        compute_s=ct, memory_s=mt, collective_s=xt,
+        bottleneck=bottleneck,
+        model_flops_per_device=model_flops_per_device,
+        useful_ratio=(model_flops_per_device / flops_per_device
+                      if flops_per_device else 0.0),
+        roofline_fraction=frac,
+    )
+
+
+def analyze_compiled(compiled, model_flops_global: float, n_devices: int):
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    rl = roofline_terms(flops, nbytes, float(coll["total"]),
+                        model_flops_global / n_devices)
+    return rl, coll, cost
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(m.argument_size_in_bytes),
+            "output_bytes": int(m.output_size_in_bytes),
+            "temp_bytes": int(m.temp_size_in_bytes),
+            "alias_bytes": int(m.alias_size_in_bytes),
+            "peak_estimate_bytes": int(m.argument_size_in_bytes
+                                       + m.output_size_in_bytes
+                                       + m.temp_size_in_bytes
+                                       - m.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": str(e)}

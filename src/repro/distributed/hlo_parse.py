@@ -1,0 +1,191 @@
+"""Trip-count-aware HLO collective accounting.
+
+``compiled.cost_analysis()``/plain text scans count a while-loop body ONCE,
+but a scanned transformer executes its layer body L times (and the flash
+attention scans execute nq x nk times). This module parses the
+SPMD-partitioned HLO into its computation graph, recovers while-loop trip
+counts from their condition computations, and weights every collective
+instruction by the product of enclosing trip counts. Conditional branches are
+weighted by the max across branches (upper bound; relevant only for the
+hybrid arch — noted in EXPERIMENTS.md).
+
+Shapes in the partitioned module are per-device, so the returned bytes are
+per-device bytes moved.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(
+    r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(
+    r"(?:true_computation|false_computation|branch_computations=\{[^}]*)"
+)
+_BRANCH_LIST_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(-start|-done)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    entry_alias = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_START.match(s)
+            if m and not s.startswith("//"):
+                cur = m.group(1)
+                comps[cur] = []
+                if raw.lstrip().startswith("ENTRY"):
+                    entry_alias = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+    if entry_alias is not None:
+        comps["__entry__"] = comps[entry_alias]
+    return comps
+
+
+_NAMED_CONST_RE = re.compile(r"%([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)")
+_COMPARE_OPS_RE = re.compile(r"compare\(([^)]*)\)")
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    """The loop bound: jax scans lower the cond to ``lt(i, N)``; take the
+    largest constant that is an *operand of a compare* (conds can contain
+    unrelated large constants — clamp bounds, iota limits)."""
+    consts: dict[str, int] = {}
+    for line in cond_lines:
+        m = _NAMED_CONST_RE.search(line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    best = 1
+    for line in cond_lines:
+        m = _COMPARE_OPS_RE.search(line)
+        if not m:
+            continue
+        for op in m.group(1).split(","):
+            name = op.strip().lstrip("%")
+            if name in consts:
+                best = max(best, consts[name])
+            else:
+                mm = re.match(r"\w+\[\]\s*constant\((\d+)\)", op.strip())
+                if mm:
+                    best = max(best, int(mm.group(1)))
+    return best
+
+
+def collective_bytes_weighted(hlo_text: str) -> dict:
+    comps = split_computations(hlo_text)
+    if "__entry__" not in comps:
+        # fall back: treat whole text as one computation
+        comps["__entry__"] = [l.strip() for l in hlo_text.splitlines()]
+
+    def local_collectives(lines):
+        out = []
+        for line in lines:
+            m = _COLL_LINE_RE.search(line)
+            if not m or m.group(3) == "-done":
+                continue
+            nbytes = shape_bytes(m.group(1))
+            kind = m.group(2)
+            if kind == "reduce-scatter":
+                g = _GROUPS_IOTA_RE.search(line)
+                if g:
+                    nbytes *= int(g.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(line)
+                    if gl:
+                        nbytes *= len(gl.group(1).split(","))
+            out.append((kind, nbytes))
+        return out
+
+    def children(lines):
+        """(child_name, multiplier) pairs referenced by this computation."""
+        out = []
+        for line in lines:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                tc = _trip_count(comps.get(cond, []))
+                out.append((body, tc))
+                continue
+            bl = _BRANCH_LIST_RE.search(line)
+            if bl:
+                names = [n.strip().lstrip("%") for n in bl.group(1).split(",")]
+                out.append(("__max__", [(n, 1) for n in names]))
+                continue
+            tfs = _TF_RE.findall(line)
+            if tfs:
+                out.append(("__max__", [(n, 1) for n in tfs]))
+                continue
+            for c in _CALL_RE.findall(line):
+                # reduction lambdas etc. — no collectives inside, cheap to walk
+                out.append((c, 1))
+        return out
+
+    memo: dict[str, dict] = {}
+
+    def walk(name: str, depth=0) -> dict:
+        if name in memo:
+            return memo[name]
+        if depth > 64 or name not in comps:
+            return {k: 0 for k in _COLL_KINDS}
+        lines = comps[name]
+        tot = defaultdict(int)
+        for kind, b in local_collectives(lines):
+            tot[kind] += b
+        for child, mult in children(lines):
+            if child == "__max__":
+                branch_tots = [walk(n, depth + 1) for n, _ in mult]
+                if branch_tots:
+                    best = max(branch_tots,
+                               key=lambda d: sum(d.get(k, 0) for k in _COLL_KINDS))
+                    for k in _COLL_KINDS:
+                        tot[k] += best.get(k, 0)
+            else:
+                sub = walk(child, depth + 1)
+                for k in _COLL_KINDS:
+                    tot[k] += mult * sub.get(k, 0)
+        res = {k: int(tot.get(k, 0)) for k in _COLL_KINDS}
+        memo[name] = res
+        return res
+
+    res = walk("__entry__")
+    res["total"] = sum(res[k] for k in _COLL_KINDS)
+    return res

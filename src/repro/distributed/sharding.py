@@ -1,0 +1,178 @@
+"""Mesh axes and partition rules.
+
+Mesh layout follows the PS mapping in DESIGN.md §2:
+  * ``model`` axis  — the "servers": parameter/optimizer shards (TP/EP).
+  * ``data`` axis   — the "workers": data-parallel replicas (+ FSDP shard).
+  * ``pod`` axis    — optional outer data axis for multi-pod meshes.
+
+Rules are path-based; every rule names the *unstacked* spec and is
+automatically lifted over the leading layer-stack dimension. Any dim that is
+not divisible by its assigned axis group degrades gracefully (that axis is
+dropped for that dim), so unusual widths (e.g. hubert's vocab of 504) still
+shard everything else.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    mesh: Mesh
+    data_axes: tuple[str, ...]  # ("data",) or ("pod", "data")
+    model_axis: str = "model"
+
+    @property
+    def data_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def model_size(self) -> int:
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def n_devices(self) -> int:
+        return self.data_size * self.model_size
+
+    # -- symbols used in rules: "D" -> data axes, "M" -> model axis ---------
+    def resolve(self, sym) -> Any:
+        if sym == "D":
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        if sym == "M":
+            return self.model_axis
+        return sym
+
+    def axis_size(self, sym) -> int:
+        if sym == "D":
+            return self.data_size
+        if sym == "M":
+            return self.model_size
+        return 1
+
+
+def single_device_meshspec() -> MeshSpec:
+    """A (1, 1) mesh over whatever single device is present (CPU tests)."""
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(dev, ("data", "model"))
+    return MeshSpec(mesh=mesh, data_axes=("data",))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules.  (regex on pytree path, unstacked spec symbols)
+# ---------------------------------------------------------------------------
+PARAM_RULES: tuple[tuple[str, tuple], ...] = (
+    (r"embed/tokens$",            ("M", "D")),
+    (r"frontend/proj$",           (None, "D")),
+    (r"lm_head/w$",               ("D", "M")),
+    (r"(final_norm|ln1|ln2|ln3|norm)/scale$", (None,)),
+    (r"attn/wq$",                 ("D", "M")),
+    (r"attn/w[kv]$",              ("D", "M")),
+    (r"attn/wo$",                 ("M", "D")),
+    (r"attn/b[qkv]$",             ("M",)),
+    (r"mlp/w[ig]$",               ("D", "M")),
+    (r"mlp/wo$",                  ("M", "D")),
+    (r"moe/router$",              ("D", None)),
+    (r"moe/w[ig]$",               ("M", "D", None)),
+    (r"moe/wo$",                  ("M", None, "D")),
+    (r"ssm/in_proj$",             ("D", "M")),
+    (r"ssm/conv_w$",              ("M", None)),
+    (r"ssm/conv_b$",              ("M",)),
+    (r"ssm/x_proj$",              ("M", None)),
+    (r"ssm/dt_w$",                (None, "M")),
+    (r"ssm/dt_b$",                ("M",)),
+    (r"ssm/A_log$",               ("M", None)),   # mamba1 (Di,N)
+    (r"ssm/A_log2$",              (None,)),       # mamba2 (nh,)
+    (r"ssm/Dskip$",               ("M",)),
+    (r"ssm/Dskip2$",              (None,)),
+    (r"ssm/BC_proj$",             ("D", None)),
+    (r"ssm/dt_proj2$",            ("D", None)),
+    (r"ssm/dt_bias2$",            (None,)),
+    (r"ssm/gnorm$",               ("M",)),
+    (r"ssm/out_proj$",            ("M", "D")),
+)
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _fit(spec_syms: tuple, shape: tuple, ms: MeshSpec) -> P:
+    """Lift an unstacked rule over optional leading stack dims and drop axes
+    that don't divide the corresponding dim."""
+    pad = len(shape) - len(spec_syms)
+    syms = (None,) * pad + tuple(spec_syms)
+    out = []
+    for dim, sym in zip(shape, syms):
+        if sym is None:
+            out.append(None)
+            continue
+        size = ms.axis_size(sym)
+        if size > 1 and dim % size == 0:
+            out.append(ms.resolve(sym))
+        elif sym == "D" and len(ms.data_axes) > 1 and dim % ms.mesh.shape[ms.data_axes[-1]] == 0:
+            out.append(ms.data_axes[-1])  # fall back to inner data axis only
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_pspec(path, shape, ms: MeshSpec) -> P:
+    s = path_str(path)
+    for pat, spec in PARAM_RULES:
+        if re.search(pat, s):
+            return _fit(spec, shape, ms)
+    return P(*([None] * len(shape)))
+
+
+def param_specs(shapes_tree, ms: MeshSpec):
+    """Pytree of PartitionSpec matching a pytree of ShapeDtypeStruct/arrays."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf.shape, ms), shapes_tree
+    )
+
+
+def param_shardings(shapes_tree, ms: MeshSpec):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ms.mesh, spec), param_specs(shapes_tree, ms)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding helpers
+# ---------------------------------------------------------------------------
+
+def fit_act_spec(shape: tuple, syms: tuple, ms: MeshSpec) -> P:
+    return _fit(syms, shape, ms)
+
+
+def constrain(x, ms: MeshSpec | None, *syms):
+    """with_sharding_constraint with graceful divisibility fallback.
+
+    ``syms`` uses the same "D"/"M"/None symbols as the param rules and must
+    match ``x.ndim`` (or be shorter; it is right-aligned like param rules).
+    """
+    if ms is None or ms.n_devices == 1:
+        return x
+    spec = _fit(tuple(syms), x.shape, ms)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ms.mesh, spec))
+
+
+def batch_pspec(ms: MeshSpec, ndim: int, batch_dim: int = 0) -> P:
+    out = [None] * ndim
+    out[batch_dim] = ms.resolve("D")
+    return P(*out)

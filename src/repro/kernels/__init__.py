@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+flash_attention — causal-block-skipping online-softmax attention (GQA-aware)
+mamba_scan      — VMEM-resident chunked selective scan (mamba1 recurrence)
+quant           — blockwise int8 stochastic-rounding (de)quantization
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes in
+interpret mode (CPU) against the oracle. On CPU the models use the jnp
+paths; on TPU the kernels are drop-in (same contracts).
+"""

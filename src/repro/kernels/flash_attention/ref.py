@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel: naive masked attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, H, hd) (kv already head-expanded).
+
+    fp32 softmax; returns (B, Sq, H, hd) in q.dtype.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        mask = qpos >= kpos
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

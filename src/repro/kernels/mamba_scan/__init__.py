@@ -1,0 +1,5 @@
+from repro.kernels.mamba_scan.kernel import selective_scan
+from repro.kernels.mamba_scan.ops import selective_scan_op
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+__all__ = ["selective_scan", "selective_scan_op", "selective_scan_ref"]

@@ -1,0 +1,15 @@
+"""jit'd public wrapper for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mamba_scan.kernel import selective_scan
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def selective_scan_op(x, dt, Bm, Cm, A, *, chunk: int = 64,
+                      block_d: int = 128, interpret: bool = False):
+    return selective_scan(x, dt, Bm, Cm, A, chunk=chunk, block_d=block_d,
+                          interpret=interpret)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the selective-scan (mamba1) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, Bm, Cm, A, h0=None):
+    """x, dt: (B, S, D); Bm, Cm: (B, S, N); A: (D, N).
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t ;  y_t = <h_t, C_t>
+    Returns (y: (B, S, D) fp32, h_last: (B, D, N) fp32).
+    """
+    B, S, D = x.shape
+    N = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t
+        dA = jnp.exp(dt_t[..., None] * Af)               # (B, D, N)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B, D, N), jnp.float32) if h0 is None else h0
+    h_last, ys = jax.lax.scan(
+        step, h0,
+        (dtf.transpose(1, 0, 2), Bf.transpose(1, 0, 2),
+         Cf.transpose(1, 0, 2), xf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h_last

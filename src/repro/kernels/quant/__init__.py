@@ -1,0 +1,6 @@
+from repro.kernels.quant.kernel import dequantize, quantize
+from repro.kernels.quant.ops import dequantize_op, quantize_op
+from repro.kernels.quant.ref import dequantize_ref, quantize_ref
+
+__all__ = ["quantize", "dequantize", "quantize_op", "dequantize_op",
+           "quantize_ref", "dequantize_ref"]

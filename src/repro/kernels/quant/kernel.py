@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: blockwise int8 quantize with stochastic rounding.
+
+Used on the gradient push path (DESIGN.md §2: the generalization of the
+paper's enable_bfloat16_sendrecv knob). One grid row per quantization block;
+randomness is supplied by the caller (deterministic, testable). The rounding
+is unbiased: E[q * scale] = x.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, r_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)              # (1, block)
+    r = r_ref[...]
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scaled = x / scale
+    lo = jnp.floor(scaled)
+    q = lo + (r < (scaled - lo)).astype(jnp.float32)
+    q = jnp.clip(q, -127.0, 127.0)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quantize(x, rand_u01, *, block: int = 256, interpret: bool = False):
+    """x, rand_u01: (n,) with n % block == 0 -> (int8 (n,), fp32 (n//block,))."""
+    n = x.shape[0]
+    nb = n // block
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, block), jnp.int8),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        interpret=interpret,
+    )(x.reshape(nb, block), rand_u01.reshape(nb, block))
+    return q.reshape(n), s.reshape(nb)
+
+
+def dequantize(q, scales, *, block: int = 256, interpret: bool = False):
+    nb = scales.shape[0]
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+    )(q.reshape(nb, block), scales.reshape(nb, 1))
+    return x.reshape(-1)

@@ -1,0 +1,18 @@
+"""jit'd wrappers for the quantization kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.quant.kernel import dequantize, quantize
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_op(x, rand_u01, *, block: int = 256, interpret: bool = False):
+    return quantize(x, rand_u01, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequantize_op(q, scales, *, block: int = 256, interpret: bool = False):
+    return dequantize(q, scales, block=block, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for blockwise int8 stochastic-rounding quantization."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, rand_u01, block: int = 256):
+    """x: (n,) fp32 (n % block == 0); rand_u01: (n,) uniforms in [0,1).
+
+    Per-block symmetric int8 with stochastic rounding (unbiased).
+    Returns (q: (n,) int8, scales: (n//block,) fp32).
+    """
+    n = x.shape[0]
+    nb = n // block
+    xb = x.reshape(nb, block).astype(jnp.float32)
+    rb = rand_u01.reshape(nb, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
+    scaled = xb / scale[:, None]
+    lo = jnp.floor(scaled)
+    q = lo + (rb < (scaled - lo)).astype(jnp.float32)
+    q = jnp.clip(q, -127, 127)
+    return q.reshape(n).astype(jnp.int8), scale
+
+
+def dequantize_ref(q, scales, block: int = 256):
+    nb = scales.shape[0]
+    return (q.reshape(nb, block).astype(jnp.float32)
+            * scales[:, None]).reshape(-1)

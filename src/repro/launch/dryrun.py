@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-importing module)
+# NOTE: no `from __future__ import annotations` here — the XLA_FLAGS lines
+# must stay the very first statements of the module (see MULTI-POD DRY-RUN).
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (shardings
+compose, collectives are supported, memory fits) and extracts the roofline
+terms from the compiled artifact. Results land in artifacts/dryrun/*.json and
+are summarized into EXPERIMENTS.md by benchmarks/roofline_report.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4-mini-3.8b \
+      --shape train_4k [--multi-pod] [--knobs k=v,...]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (SHAPES_BY_NAME, ShapeConfig, TrainConfig,
+                                applicable_shapes)
+from repro.configs.registry import ARCHS, get_config
+from repro.data.synthetic import input_specs
+from repro.distributed import hlo_analysis
+from repro.distributed.costmodel import MeshDims, cell_costs
+from repro.distributed.hlo_parse import collective_bytes_weighted
+from repro.launch.mesh import production_meshspec
+from repro.ps.stepfn import (StepKnobs, batch_specs, cache_specs,
+                             jit_serve_step, jit_train_step, train_state_shapes)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+
+def model_flops_global(cfg, shape: ShapeConfig) -> float:
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # decode: one token per seq
+
+
+def default_knobs(cfg, shape: ShapeConfig, optimized: bool = False) -> StepKnobs:
+    """Paper-faithful baseline knobs vs the beyond-paper optimized set
+    (EXPERIMENTS.md §Perf — derived by the hillclimb iterations)."""
+    if not optimized:
+        if shape.kind == "train":
+            return StepKnobs(remat="full", q_chunk=512, k_chunk=1024)
+        return StepKnobs(remat="none", q_chunk=512, k_chunk=1024)
+    big = cfg.n_params() > 6e10
+    ssm = cfg.family in ("ssm", "hybrid")
+    if shape.kind == "train":
+        return StepKnobs(
+            remat="full", seq_shard=True, ce_chunk=512,
+            microbatches=8 if big else 4,
+            acc_dtype="bf16" if big else "f32",
+            ssm_chunk=64 if ssm else 0,
+            attn_skip_masked=True)
+    if shape.kind == "prefill":
+        return StepKnobs(remat="none", seq_shard=True,
+                         ssm_chunk=64 if ssm else 0, attn_skip_masked=True)
+    # decode: replicating params across data kills the per-step FSDP gather,
+    # but only fits HBM when the model-axis param shard is small enough
+    # (<= ~4 GB/device); larger models keep the FSDP placement.
+    tp_ok = cfg.n_params() * 2 / 16 < 4e9
+    return StepKnobs(remat="none",
+                     serve_params="tp_only" if tp_ok else "fsdp")
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             knobs: StepKnobs | None = None, opt_dtype=None,
+             save: bool = True, tag: str = "", optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ms = production_meshspec(multi_pod=multi_pod)
+    knobs = knobs or default_knobs(cfg, shape, optimized)
+    if opt_dtype is None:
+        # >=100B-param models use bf16 optimizer moments (memory-driven;
+        # DESIGN.md §6) — fp32 elsewhere.
+        opt_dtype = jnp.bfloat16 if cfg.n_params() > 1e11 else jnp.float32
+    tc = TrainConfig()
+
+    t0 = time.time()
+    with ms.mesh:
+        if shape.kind == "train":
+            jitted, sshapes, _ = jit_train_step(cfg, tc, ms, knobs,
+                                                opt_dtype=opt_dtype)
+            bshapes = input_specs(cfg, shape)
+            bspecs = batch_specs(bshapes, ms)
+            bshard = jax.tree_util.tree_map(
+                lambda spec: jax.NamedSharding(ms.mesh, spec), bspecs)
+            bstructs = jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                bshapes, bshard)
+            lowered = jitted.lower(sshapes, bstructs)
+        elif shape.kind == "prefill":
+            jitted, pshapes = jit_serve_step(cfg, shape, ms, knobs)
+            bshapes = input_specs(cfg, shape)
+            lowered = jitted.lower(pshapes, bshapes)
+        else:  # decode
+            jitted, (pshapes, cshapes) = jit_serve_step(cfg, shape, ms, knobs)
+            spec_in = input_specs(cfg, shape)
+            lowered = jitted.lower(pshapes, spec_in["cache"],
+                                   spec_in["tokens"], spec_in["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = hlo_analysis.memory_stats(compiled)
+    raw_cost = {k: float(v) for k, v in compiled.cost_analysis().items()
+                if isinstance(v, (int, float))}
+    hlo_text = compiled.as_text()
+    coll = collective_bytes_weighted(hlo_text)
+
+    # analytic per-device flops/bytes (exact einsum math; see costmodel.py)
+    md = MeshDims(n_dev=ms.n_devices, dsz=ms.data_size, msz=ms.model_size)
+    opt_b = 12.0 if opt_dtype == jnp.bfloat16 else 16.0
+    ac = cell_costs(cfg, shape, md, remat=knobs.remat,
+                    microbatches=knobs.microbatches,
+                    opt_bytes_per_param=opt_b, ssm_chunk=knobs.ssm_chunk,
+                    attn_skip=knobs.attn_skip_masked,
+                    serve_params=knobs.serve_params)
+    rl = hlo_analysis.roofline_terms(
+        ac["flops_dev"], ac["hbm_bytes_dev"], float(coll["total"]),
+        ac["model_flops_dev"])
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "mesh": dict(ms.mesh.shape), "n_devices": ms.n_devices,
+        "knobs": dataclasses.asdict(knobs),
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "cost_analysis_raw": raw_cost,          # once-per-while-body; cf. docs
+        "collectives_hlo": coll,                # trip-count weighted, per dev
+        "analytic": ac,
+        "roofline": rl.to_dict(),
+        "model_flops_global": ac["model_flops_global"],
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = "multipod" if multi_pod else "pod"
+        name = f"{arch}__{shape_name}__{suffix}{tag}.json"
+        with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def all_cells():
+    for arch, cfg in ARCHS.items():
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--optimized", action="store_true")
+    ap.add_argument("--set", default="",
+                    help="StepKnobs overrides, e.g. remat=dots,ssm_chunk=64,"
+                         "attn_skip_masked=1,serve_params=tp_only")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.set:
+        for kv in args.set.split(","):
+            k, v = kv.split("=")
+            if k in ("microbatches", "staleness", "scan_unroll", "q_chunk",
+                     "k_chunk", "ce_chunk", "ssm_chunk"):
+                overrides[k] = int(v)
+            elif k in ("attn_skip_masked", "donate", "seq_shard"):
+                overrides[k] = bool(int(v))
+            else:
+                overrides[k] = v  # remat/compression/serve_params/acc_dtype
+
+    cells = (list(all_cells()) if args.all
+             else [(args.arch, args.shape)])
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+            try:
+                knobs = None
+                if overrides:
+                    base = default_knobs(get_config(arch),
+                                         SHAPES_BY_NAME[shape],
+                                         args.optimized)
+                    knobs = dataclasses.replace(base, **overrides)
+                r = run_cell(arch, shape, multi_pod=mp, tag=args.tag,
+                             knobs=knobs, optimized=args.optimized)
+                rl = r["roofline"]
+                print(f"[ok] {label}: compile={r['compile_s']}s "
+                      f"bottleneck={rl['bottleneck']} "
+                      f"compute={rl['compute_s']:.4f}s "
+                      f"memory={rl['memory_s']:.4f}s "
+                      f"collective={rl['collective_s']:.4f}s "
+                      f"frac={rl['roofline_fraction']:.3f}", flush=True)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {label}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

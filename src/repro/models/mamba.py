@@ -1,0 +1,167 @@
+"""Mamba blocks: mamba1 (selective scan, falcon-mamba) and mamba2 (SSD-style
+scalar-A heads, zamba2). Pure-jnp sequential-scan reference; the chunked
+Pallas kernel in ``repro.kernels.mamba_scan`` is the TPU fast path for the
+inner recurrence (validated against these semantics).
+
+All blocks return (y, new_state) where state = {"conv": (B, Di, K-1),
+"h": (B, Di, N) | (B, nh, P, N)}; pass ``state=None`` for full-sequence
+(train/prefill) mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def _scan_seq(step, h0, seq, chunk: int, S: int):
+    """Time scan, optionally chunk-blocked (the Pallas mamba_scan schedule:
+    the state crosses HBM once per chunk instead of once per step)."""
+    if chunk and S > chunk and S % chunk == 0:
+        nc = S // chunk
+        cseq = jax.tree_util.tree_map(
+            lambda t: t.reshape((nc, chunk) + t.shape[1:]), seq)
+
+        @jax.checkpoint
+        def outer(h, cs):
+            # checkpointed: backward recomputes the chunk, so only the chunk-
+            # boundary state h is saved (the kernel's VMEM-residency schedule)
+            return jax.lax.scan(step, h, cs)
+
+        h_last, ys = jax.lax.scan(outer, h0, cseq)
+        ys = jax.tree_util.tree_map(
+            lambda t: t.reshape((S,) + t.shape[2:]), ys)
+        return h_last, ys
+    return jax.lax.scan(step, h0, seq)
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, Di); w: (Di, K); b: (Di,).
+
+    With ``state`` (B, Di, K-1) given, x has S=1 and the state is shifted.
+    """
+    B, S, Di = x.shape
+    K = w.shape[1]
+    if state is not None:
+        window = jnp.concatenate([state.astype(x.dtype).transpose(0, 2, 1), x],
+                                 axis=1)                     # (B, K, Di)
+        y = jnp.einsum("bkd,dk->bd", window, w) + b
+        new_state = window[:, 1:, :].transpose(0, 2, 1)
+        return y[:, None, :], new_state
+    pad = jnp.zeros((B, K - 1, Di), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # unfold K taps: sum_k x[t-K+1+k] * w[:, k]
+    y = sum(xp[:, k:k + S, :] * w[:, k][None, None, :] for k in range(K))
+    new_state = xp[:, S:, :].transpose(0, 2, 1)              # last K-1 inputs
+    return y + b, new_state
+
+
+def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
+    """Falcon-mamba style block. x: (B, S, D)."""
+    B, S, D = x.shape
+    Di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])          # (B,S,2Di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    xs = constrain(xs, ms, "D", None, "M")
+
+    proj = jnp.einsum("bsi,ij->bsj", xs, p["x_proj"])        # (B,S,R+2N)
+    dt_raw, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_w"]) + p["dt_b"]
+    ).astype(jnp.float32)                                    # (B,S,Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (Di,N)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    xf = xs.astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t                              # (B,Di),(B,N),(B,N),(B,Di)
+        dA = jnp.exp(dt_t[..., None] * A)                    # (B,Di,N)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    if state is None:
+        h0 = jnp.zeros((B, Di, N), jnp.float32)
+        seq = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+               Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2))
+        h_last, ys = _scan_seq(step, h0, seq, chunk, S)
+        y = ys.transpose(1, 0, 2)                            # (B,S,Di)
+        new_h = h_last
+    else:
+        new_h, y1 = step(state["h"].astype(jnp.float32),
+                         (dt[:, 0], Bm[:, 0], Cm[:, 0], xf[:, 0]))
+        y = y1[:, None, :]
+
+    y = y + p["Dskip"].astype(jnp.float32) * xf
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": new_h}
+
+
+def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
+    """Zamba2-style SSD block (single B/C group, scalar A per head)."""
+    B, S, D = x.shape
+    Di, N = cfg.d_inner, cfg.ssm_state
+    P_, nh = cfg.ssm_head_dim, cfg.n_ssm_heads
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+    xs = constrain(xs, ms, "D", None, "M")
+
+    BC = jnp.einsum("bsd,dn->bsn", x, p["BC_proj"])          # (B,S,2N)
+    Bm, Cm = jnp.split(BC.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["dt_proj2"]) + p["dt_bias2"]
+    ).astype(jnp.float32)                                    # (B,S,nh)
+    A = -jnp.exp(p["A_log2"].astype(jnp.float32))            # (nh,)
+    xh = xs.reshape(B, S, nh, P_).astype(jnp.float32)
+
+    def step(h, t):
+        dt_t, B_t, C_t, x_t = t                              # (B,nh),(B,N),(B,N),(B,nh,P)
+        dA = jnp.exp(dt_t * A)                               # (B,nh)
+        upd = (dt_t[..., None] * x_t)[..., None] * B_t[:, None, None, :]
+        h = dA[..., None, None] * h + upd                    # (B,nh,P,N)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    if state is None:
+        h0 = jnp.zeros((B, nh, P_, N), jnp.float32)
+        seq = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+               Cm.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3))
+        h_last, ys = _scan_seq(step, h0, seq, chunk, S)
+        y = ys.transpose(1, 0, 2, 3)                         # (B,S,nh,P)
+        new_h = h_last
+    else:
+        new_h, y1 = step(state["h"].astype(jnp.float32),
+                         (dt[:, 0], Bm[:, 0], Cm[:, 0], xh[:, 0]))
+        y = y1[:, None]
+
+    y = y + p["Dskip2"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, Di)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = (y * (1.0 + p["gnorm"].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": new_h}
+
+
+def init_mamba_state(cfg, batch: int, dtype=jnp.float32):
+    Di, K = cfg.d_inner, cfg.ssm_conv
+    conv = jnp.zeros((batch, Di, K - 1), dtype)
+    if cfg.ssm_version == 1:
+        h = jnp.zeros((batch, Di, cfg.ssm_state), jnp.float32)
+    else:
+        h = jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32)
+    return {"conv": conv, "h": h}

@@ -1,0 +1,202 @@
+"""Top-k routed mixture-of-experts with sort-based, *locally grouped*
+capacity dispatch (expert parallelism).
+
+Tokens are split into G groups (G = the data-parallel shard count), and
+routing/sort/dispatch happen independently per group — exactly the local-
+dispatch semantics of real EP systems (a worker routes only its own tokens,
+with per-worker capacity). This keeps the argsort and the gather/scatter
+paths sharded: a single global sort would force GSPMD to replicate the
+(T*topk, D) dispatch buffers on every device (~68 GB/device for the
+qwen3-moe prefill cell — measured; see EXPERIMENTS.md §Perf).
+
+The grouped activations (G, E, C, D) carry shardings (data, model, -, -), so
+the group dim lives on the data axis, experts on the model axis, and the
+expert einsum needs no collectives beyond the usual FSDP weight gather.
+Overflowing tokens beyond the per-group capacity are dropped (standard
+capacity-factor semantics); the router aux loss balances load.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+
+def _capacity(tokens_per_group: int, topk: int, n_experts: int,
+              cf: float) -> int:
+    cap = int(max(topk, round(tokens_per_group * topk / n_experts * cf)))
+    # tiny token counts (decode steps) must never drop: the steady-state
+    # capacity-factor model only holds at large T
+    cap = max(cap, min(tokens_per_group * topk, 16))
+    return min(cap, tokens_per_group * topk)
+
+
+def moe_block(x, params, cfg, ms=None):
+    """x: (T, D) flattened tokens -> (out: (T, D), aux_loss: scalar).
+
+    On a multi-device mesh this routes through the explicit shard_map EP
+    implementation below; the GSPMD-auto grouped path remains for single
+    device (tests / CPU training)."""
+    if ms is not None and ms.n_devices > 1 and x.shape[0] % ms.data_size == 0 \
+            and (x.shape[0] // ms.data_size) >= cfg.moe_top_k:
+        return moe_block_ep(x, params, cfg, ms)
+    return _moe_block_gspmd(x, params, cfg, ms)
+
+
+def _moe_block_gspmd(x, params, cfg, ms=None):
+    T, D = x.shape
+    E, topk = cfg.n_experts, cfg.moe_top_k
+    G = 1
+    Tg = T // G
+
+    xg = constrain(x.reshape(G, Tg, D), ms, "D", None, None)
+
+    gate_logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                             params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gate_logits, axis=-1)            # (G, Tg, E)
+    topw, topi = jax.lax.top_k(probs, topk)                 # (G, Tg, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch-style), computed over all tokens.
+    density = jnp.mean(jax.nn.one_hot(topi[..., 0], E, dtype=jnp.float32),
+                       axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * mean_probs)
+
+    C = _capacity(Tg, topk, E, cfg.capacity_factor)
+
+    flat_e = topi.reshape(G, Tg * topk)                     # (G, Tg*k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)       # local sorts
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok = order // topk                                     # (G, Tg*k)
+    counts = jnp.zeros((G, E), jnp.int32).at[
+        jnp.arange(G)[:, None], flat_e].add(1, mode="drop")
+    offsets = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32), jnp.cumsum(counts, axis=-1)[:, :-1]],
+        axis=-1)
+    pos = (jnp.arange(Tg * topk, dtype=jnp.int32)[None, :]
+           - jnp.take_along_axis(offsets, se, axis=-1))
+    keep = pos < C
+
+    # dispatch: scatter token copies into (G, E, C, D); dropped writes vanish
+    g_idx = jnp.arange(G)[:, None]
+    xe = jnp.zeros((G, E, C, D), x.dtype)
+    xe = xe.at[g_idx, se, pos].set(
+        jnp.take_along_axis(xg, tok[..., None], axis=1), mode="drop")
+    xe = constrain(xe, ms, "D", "M", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    g = jnp.einsum("gecd,edf->gecf", xe, params["wg"])
+    h = jax.nn.silu(g) * h
+    y = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    y = constrain(y, ms, "D", "M", None, None)
+
+    # combine: gather back and weight by (renormalized) gate probs
+    w_sorted = jnp.take_along_axis(topw.reshape(G, Tg * topk), order, axis=-1)
+    safe_pos = jnp.minimum(pos, C - 1)
+    y_tok = (y[g_idx, se, safe_pos]
+             * (w_sorted * keep)[..., None].astype(y.dtype))  # (G, Tg*k, D)
+    out = jnp.zeros((G, Tg, D), y.dtype).at[g_idx, tok].add(y_tok)
+    out = constrain(out, ms, "D", None, None)
+    return out.reshape(T, D), aux
+
+
+# ===========================================================================
+# Explicit expert parallelism (shard_map) — the multi-device path
+# ===========================================================================
+
+def _local_dispatch(xl, router, cfg):
+    """Per-shard routing: xl (Tl, D) -> (xe (E, C, D), combine metadata)."""
+    Tl, D = xl.shape
+    E, topk = cfg.n_experts, cfg.moe_top_k
+    gate_logits = jnp.einsum("td,de->te", xl.astype(jnp.float32),
+                             router.astype(jnp.float32))
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, topk)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    density = jnp.mean(jax.nn.one_hot(topi[:, 0], E, dtype=jnp.float32),
+                       axis=0)
+    aux = E * jnp.sum(density * jnp.mean(probs, axis=0))
+
+    C = _capacity(Tl, topk, E, cfg.capacity_factor)
+    flat_e = topi.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se = flat_e[order]
+    tok = order // topk
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(Tl * topk, dtype=jnp.int32) - offsets[se]
+    keep = pos < C
+    xe = jnp.zeros((E, C, D), xl.dtype).at[se, pos].set(xl[tok], mode="drop")
+    w_sorted = topw.reshape(-1)[order]
+    meta = (se, pos, tok, keep, w_sorted, C)
+    return xe, aux, meta
+
+
+def moe_block_ep(x, params, cfg, ms):
+    """Expert parallelism under shard_map (DESIGN.md §5; EXPERIMENTS.md §Perf).
+
+    Every model-rank redundantly routes its data-shard's tokens (activations
+    are replicated across the model axis there), then *slices* its own expert
+    slab — dispatch needs no collective at all. Expert weights are FSDP-
+    gathered over the data axis (the PS "pull"), and the partial expert
+    outputs are combined with one psum over the model axis (the "push").
+    """
+    from jax.sharding import PartitionSpec as P
+
+    T, D = x.shape
+    E, topk, F = cfg.n_experts, cfg.moe_top_k, cfg.d_ff
+    mesh = ms.mesh
+    dax = ms.data_axes if len(ms.data_axes) > 1 else ms.data_axes[0]
+    msz = ms.model_size
+    e_loc = E // msz if E % msz == 0 else 0
+    if e_loc == 0:
+        # experts don't divide the model axis: fall back to GSPMD path
+        return _moe_block_gspmd(x, params, cfg, ms)
+
+    def local_fn(xl, router_l, wi_l, wg_l, wo_l):
+        # FSDP gather of this rank's expert shard over the data axis ("pull")
+        router = jax.lax.all_gather(router_l, dax, axis=0, tiled=True)
+        wi = jax.lax.all_gather(wi_l, dax, axis=1, tiled=True)
+        wg = jax.lax.all_gather(wg_l, dax, axis=1, tiled=True)
+        wo = jax.lax.all_gather(wo_l, dax, axis=2, tiled=True)
+
+        xe, aux, meta = _local_dispatch(xl, router, cfg)
+        se, pos, tok, keep, w_sorted, C = meta
+
+        m = jax.lax.axis_index(ms.model_axis)
+        slab = jax.lax.dynamic_slice_in_dim(xe, m * e_loc, e_loc, axis=0)
+        h = jnp.einsum("ecd,edf->ecf", slab, wi)
+        g = jnp.einsum("ecd,edf->ecf", slab, wg)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, wo)   # (e_loc,C,D)
+
+        # scatter this rank's expert outputs back to token rows (partial)
+        own = (se >= m * e_loc) & (se < (m + 1) * e_loc) & keep
+        se_loc = jnp.clip(se - m * e_loc, 0, e_loc - 1)
+        safe_pos = jnp.minimum(pos, C - 1)
+        y_tok = y[se_loc, safe_pos] * (w_sorted * own)[:, None].astype(y.dtype)
+        partial = jnp.zeros((xl.shape[0], D), y.dtype).at[tok].add(y_tok)
+        out = jax.lax.psum(partial, ms.model_axis)               # the "push"
+        aux = jax.lax.pmean(aux, dax)
+        return out, aux
+
+    specs = {
+        "x": P(dax, None),
+        "router": P(dax, None),
+        "wi": P(ms.model_axis, dax, None),
+        "wg": P(ms.model_axis, dax, None),
+        "wo": P(ms.model_axis, None, dax),
+    }
+    x = jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, specs["x"]))
+    fn = jax.shard_map(local_fn, mesh=mesh,
+                       in_specs=(specs["x"], specs["router"], specs["wi"],
+                                 specs["wg"], specs["wo"]),
+                       out_specs=(P(dax, None), P()),
+                       check_vma=False)
+    out, aux = fn(x, params["router"], params["wi"], params["wg"],
+                  params["wo"])
+    return out, aux

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (adam_init, adam_update, sgd_update,
+                                    make_optimizer, opt_state_shapes)
+
+__all__ = ["adam_init", "adam_update", "sgd_update", "make_optimizer",
+           "opt_state_shapes"]

@@ -1,0 +1,99 @@
+"""Sharded optimizers (pytree-level, no optax dependency).
+
+Optimizer state mirrors the parameter pytree, so the same partition specs
+apply — optimizer shards live with their parameter shards ("server"-side
+state in the PS mapping).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def _tmap(f, *trees, **kw):
+    return jax.tree_util.tree_map(f, *trees, **kw)
+
+
+def adam_init(params, opt_dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, opt_dtype)
+    return {"m": _tmap(zeros, params), "v": _tmap(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, opt, tc: TrainConfig):
+    c = opt["count"] + 1
+    b1, b2 = tc.beta1, tc.beta2
+    cf = c.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + tc.eps)
+        if tc.weight_decay:
+            step = step + tc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - tc.learning_rate * step
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = _tmap(upd, params, grads, opt["m"], opt["v"])
+    new_params = _tmap(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = _tmap(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = _tmap(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "count": c}
+
+
+def sgd_init(params, opt_dtype=jnp.float32, momentum: bool = True):
+    st = {"count": jnp.zeros((), jnp.int32)}
+    if momentum:
+        st["mu"] = _tmap(lambda p: jnp.zeros(p.shape, opt_dtype), params)
+    return st
+
+
+def sgd_update(params, grads, opt, tc: TrainConfig):
+    c = opt["count"] + 1
+    if "mu" in opt:
+        def upd(p, g, mu):
+            mu_new = 0.9 * mu.astype(jnp.float32) + g.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - tc.learning_rate * mu_new
+            return p_new.astype(p.dtype), mu_new.astype(mu.dtype)
+        out = _tmap(upd, params, grads, opt["mu"])
+        new_params = _tmap(lambda t: t[0], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = _tmap(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "count": c}
+    new_params = _tmap(
+        lambda p, g: (p.astype(jnp.float32)
+                      - tc.learning_rate * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, {"count": c}
+
+
+def make_optimizer(tc: TrainConfig, opt_dtype=jnp.float32):
+    if tc.optimizer == "adam":
+        return (lambda p: adam_init(p, opt_dtype),
+                lambda p, g, o: adam_update(p, g, o, tc))
+    if tc.optimizer == "momentum":
+        return (lambda p: sgd_init(p, opt_dtype, True),
+                lambda p, g, o: sgd_update(p, g, o, tc))
+    return (lambda p: sgd_init(p, opt_dtype, False),
+            lambda p, g, o: sgd_update(p, g, o, tc))
+
+
+def opt_state_shapes(param_shapes_tree, tc: TrainConfig, opt_dtype=jnp.float32):
+    """ShapeDtypeStruct pytree for the optimizer state (no allocation)."""
+    def z(s):
+        return jax.ShapeDtypeStruct(s.shape, opt_dtype)
+    if tc.optimizer == "adam":
+        return {"m": _tmap(z, param_shapes_tree),
+                "v": _tmap(z, param_shapes_tree),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if tc.optimizer == "momentum":
+        return {"mu": _tmap(z, param_shapes_tree),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    return {"count": jax.ShapeDtypeStruct((), jnp.int32)}

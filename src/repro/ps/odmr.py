@@ -1,0 +1,62 @@
+"""On-Demand Model Relocation (ODMR) — paper §V, TPU-native form.
+
+Paper semantics: on a Type I-b reconfiguration (parameter placement change),
+do NOT quiesce + checkpoint + restore. Instead relocate each parameter
+lazily, piggybacked on the normal pull/push cycle, with the ``<o, u>``
+first-touch protocol so the new server materializes the value exactly once.
+
+SPMD translation (DESIGN.md §2): the placement of every parameter shard is
+its sharding. One *transition step* is lowered with ``in_shardings`` = old
+placement and ``out_shardings`` = new placement; XLA inserts the minimal
+collective-permute/all-to-all and overlaps it with the step's own compute.
+The "original value + update" of the paper is exactly the step's dataflow:
+the parameter value flows into the optimizer update and the relocated result
+is written once at its new home — no quiescence, no host round-trip.
+
+The *baseline* (checkpoint + restore: CKP+SSR+MDR+TDR) is implemented in
+``repro.checkpoint`` and measured against ODMR in benchmarks/bench_reconfig.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import MeshSpec, param_specs
+
+
+def reshard_specs(shapes_tree, new_ms: MeshSpec):
+    return param_specs(shapes_tree, new_ms)
+
+
+def transition_step(step_fn, state_shapes, old_specs, new_specs,
+                    old_ms: MeshSpec, new_ms: MeshSpec, donate: bool = True):
+    """jit of one train step that *also* relocates: inputs placed per the old
+    setting, outputs per the new one."""
+    def shard(tree, ms):
+        return jax.tree_util.tree_map(
+            lambda spec: NamedSharding(ms.mesh, spec), tree,
+            is_leaf=lambda x: not isinstance(x, dict))
+
+    return jax.jit(
+        step_fn,
+        in_shardings=(shard(old_specs, old_ms), None),
+        out_shardings=(shard(new_specs, new_ms), None),
+        donate_argnums=(0,) if donate else (),
+    )
+
+
+def relocate_now(state, new_specs, new_ms: MeshSpec):
+    """Eager relocation (no overlapping step) — used by tests to verify the
+    value-preservation invariant, and as the Type I-b half of the baseline."""
+    return jax.tree_util.tree_map(
+        lambda x, spec: jax.device_put(x, NamedSharding(new_ms.mesh, spec)),
+        state, new_specs, is_leaf=lambda x: not isinstance(x, dict))
+
+
+def timed_blocking(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0

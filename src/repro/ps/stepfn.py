@@ -1,0 +1,270 @@
+"""Step-function builders: compile one jitted step per *system setting*.
+
+In the PS mapping (DESIGN.md §2) a "setting" X decides how the servers
+(parameter shards on the ``model`` axis, FSDP over ``data``) and workers
+(data-parallel replicas) execute one iteration. Knobs that only change the
+compiled step (Type II) are baked in here; Type I-b (placement) changes are
+realized by lowering the same step with different in/out shardings (ODMR —
+see ``repro.ps.odmr``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import MeshSpec, param_specs, fit_act_spec
+from repro.models import lm
+from repro.models.lm import ModelKnobs
+from repro.optim import make_optimizer, opt_state_shapes
+from repro.ps.compression import compress_grads
+
+
+@dataclass(frozen=True)
+class StepKnobs:
+    """The full system setting X (paper §III): Type II knobs + schedule."""
+    microbatches: int = 1
+    remat: str = "none"              # none | dots | full
+    compression: str = "none"        # none | bf16 | int8
+    staleness: int = 0               # delayed-gradient depth (ASP emulation)
+    scan_unroll: int = 1
+    q_chunk: int = 512
+    k_chunk: int = 1024
+    ce_chunk: int = 0
+    ssm_chunk: int = 0               # chunk-blocked selective scan
+    attn_skip_masked: bool = False   # causal-block skipping (flash kernel)
+    serve_params: str = "fsdp"       # fsdp | tp_only (decode placement)
+    seq_shard: bool = False          # sequence-parallel residual stream
+    acc_dtype: str = "f32"           # microbatch grad-accumulator precision
+    donate: bool = True
+
+    def model_knobs(self) -> ModelKnobs:
+        return ModelKnobs(remat=self.remat, q_chunk=self.q_chunk,
+                          k_chunk=self.k_chunk, scan_unroll=self.scan_unroll,
+                          ce_chunk=self.ce_chunk, ssm_chunk=self.ssm_chunk,
+                          attn_skip_masked=self.attn_skip_masked,
+                          seq_shard=self.seq_shard)
+
+
+# ---------------------------------------------------------------------------
+# State shapes & shardings
+# ---------------------------------------------------------------------------
+
+def train_state_shapes(cfg: ModelConfig, tc: TrainConfig,
+                       opt_dtype=jnp.float32, knobs: StepKnobs = StepKnobs()):
+    ps = lm.param_shapes(cfg)
+    state = {"params": ps, "opt": opt_state_shapes(ps, tc, opt_dtype),
+             "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if knobs.staleness > 0:
+        gq = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((knobs.staleness,) + s.shape,
+                                           jnp.bfloat16), ps)
+        state["grad_queue"] = gq
+    return state
+
+
+def state_specs(state_shapes, ms: MeshSpec):
+    """PartitionSpecs for a train state: opt/m/v/queue mirror the params."""
+    pspecs = param_specs(state_shapes["params"], ms)
+    out = {"params": pspecs, "step": P()}
+    opt = state_shapes["opt"]
+    opt_specs = {}
+    for k, v in opt.items():
+        if k == "count":
+            opt_specs[k] = P()
+        else:
+            opt_specs[k] = pspecs
+    out["opt"] = opt_specs
+    if "grad_queue" in state_shapes:
+        out["grad_queue"] = jax.tree_util.tree_map(
+            lambda spec: P(*((None,) + tuple(spec))), pspecs)
+    return out
+
+
+def batch_specs(batch_shapes, ms: MeshSpec):
+    def spec(path_unused, s):
+        if len(s.shape) == 0:
+            return P()
+        return fit_act_spec(s.shape, ("D",) + (None,) * (len(s.shape) - 1), ms)
+    return jax.tree_util.tree_map(lambda s: spec(None, s), batch_shapes)
+
+
+def cache_specs(cache_shapes, ms: MeshSpec):
+    """Decode caches: batch over data, seq (attn) / channels (ssm) on model."""
+    def spec(path, s):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        if name in ("k", "v", "shared_k", "shared_v"):
+            # (L|A, B, Smax, K, hd): batch->data, seq->model
+            return fit_act_spec(s.shape, (None, "D", "M", None, None), ms)
+        if name == "conv":
+            return fit_act_spec(s.shape, (None, "D", "M", None), ms)
+        if name == "h":
+            syms = (None, "D", "M") + (None,) * (len(s.shape) - 3)
+            return fit_act_spec(s.shape, syms, ms)
+        return P(*([None] * len(s.shape)))
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def _shard(tree_specs, ms: MeshSpec):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(ms.mesh, spec), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig, ms: MeshSpec,
+                     knobs: StepKnobs = StepKnobs()):
+    """Returns the (un-jitted) train_step(state, batch) -> (state, metrics)."""
+    mk = knobs.model_knobs()
+    _, opt_update = make_optimizer(tc)
+
+    def loss_for_grad(params, batch):
+        loss, aux = lm.loss_fn(params, batch, cfg, ms, mk)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def compute_grads(params, batch):
+        if knobs.microbatches <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+            return loss, aux, grads
+
+        n = knobs.microbatches
+        adt = jnp.float32 if knobs.acc_dtype == "f32" else jnp.bfloat16
+        mb = jax.tree_util.tree_map(
+            lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+        def micro(carry, b):
+            tot, acc = carry
+            (loss, _aux), g = grad_fn(params, b)
+            acc = jax.tree_util.tree_map(
+                lambda a, gg: a + gg.astype(a.dtype), acc, g)
+            return (tot + loss, acc), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params)
+        (tot, acc), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / n, acc)
+        return tot / n, {"ce": tot / n, "aux": jnp.zeros(())}, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        loss, aux, grads = compute_grads(params, batch)
+        grads = compress_grads(grads, knobs.compression, state["step"])
+
+        if knobs.staleness > 0:
+            # Delayed-gradient ASP: apply the gradient from `staleness` steps
+            # ago; push the fresh gradient into the queue (PS workers pushing
+            # stale updates — reproduces the paper's Fig. 2 effect).
+            queue = state["grad_queue"]
+            delayed = jax.tree_util.tree_map(lambda q: q[0].astype(jnp.float32),
+                                             queue)
+            new_queue = jax.tree_util.tree_map(
+                lambda q, g: jnp.concatenate(
+                    [q[1:], g.astype(jnp.bfloat16)[None]], axis=0),
+                queue, grads)
+            warm = state["step"] >= knobs.staleness
+            apply_grads = jax.tree_util.tree_map(
+                lambda d, g: jnp.where(warm, d, g.astype(jnp.float32)),
+                delayed, grads)
+        else:
+            new_queue = None
+            apply_grads = grads
+
+        new_params, new_opt = opt_update(params, apply_grads, state["opt"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_queue is not None:
+            new_state["grad_queue"] = new_queue
+        metrics = {"loss": loss.astype(jnp.float32),
+                   "ce": aux["ce"].astype(jnp.float32)}
+        return new_state, metrics
+
+    return train_step
+
+
+def jit_train_step(cfg: ModelConfig, tc: TrainConfig, ms: MeshSpec,
+                   knobs: StepKnobs = StepKnobs(), opt_dtype=jnp.float32,
+                   out_state_specs=None):
+    """jit-wrapped train step with explicit in/out shardings.
+
+    ``out_state_specs`` overrides the output placement — this is the ODMR
+    hook: pass the *new* layout to relocate parameters during a normal step.
+    """
+    step = build_train_step(cfg, tc, ms, knobs)
+    sshapes = train_state_shapes(cfg, tc, opt_dtype, knobs)
+    sspecs = state_specs(sshapes, ms)
+    in_state = _shard(sspecs, ms)
+    out_state = _shard(out_state_specs or sspecs, ms)
+    donate = (0,) if knobs.donate else ()
+    jitted = jax.jit(step,
+                     in_shardings=(in_state, None),
+                     out_shardings=(out_state, None),
+                     donate_argnums=donate)
+    return jitted, sshapes, sspecs
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, ms: MeshSpec,
+                       knobs: StepKnobs = StepKnobs()):
+    mk = knobs.model_knobs()
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, ms, mk)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, ms: MeshSpec,
+                      knobs: StepKnobs = StepKnobs()):
+    mk = knobs.model_knobs()
+
+    def serve_step(params, cache, tokens, pos):
+        return lm.decode_step(params, cache, tokens, pos, cfg, ms, mk)
+
+    return serve_step
+
+
+def jit_serve_step(cfg: ModelConfig, shape: ShapeConfig, ms: MeshSpec,
+                   knobs: StepKnobs = StepKnobs()):
+    """jit + shardings for prefill or decode cells.
+
+    ``knobs.serve_params == "tp_only"`` keeps parameters sharded on the model
+    axis only (replicated across data): decode then reads weights locally
+    instead of all-gathering the FSDP shards every step.
+    """
+    import dataclasses as _dc
+    pshapes = lm.param_shapes(cfg)
+    pms = (_dc.replace(ms, data_axes=()) if knobs.serve_params == "tp_only"
+           else ms)
+    pspecs = param_specs(pshapes, pms)
+    pshard = _shard(pspecs, ms)
+    if shape.kind == "prefill":
+        fn = build_prefill_step(cfg, ms, knobs)
+        # pin the returned cache's placement (batch->data, seq->model);
+        # leaving it to auto-SPMD replicates the cache (e.g. 23.6 GB/device
+        # for mistral prefill_32k)
+        cshapes_p = lm.init_cache_shapes(cfg, shape.global_batch,
+                                         shape.seq_len)
+        cshard_p = _shard(cache_specs(cshapes_p, ms), ms)
+        jitted = jax.jit(fn, in_shardings=(pshard, None),
+                         out_shardings=(None, cshard_p))
+        return jitted, pshapes
+    cshapes = lm.init_cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    cspecs = cache_specs(cshapes, ms)
+    cshard = _shard(cspecs, ms)
+    fn = build_decode_step(cfg, ms, knobs)
+    jitted = jax.jit(fn,
+                     in_shardings=(pshard, cshard, None, None),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(1,))
+    return jitted, (pshapes, cshapes)

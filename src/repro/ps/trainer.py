@@ -1,0 +1,141 @@
+"""Self-tuning training driver.
+
+``SelfTuningLoop`` is the system-agnostic glue of paper Fig. 3: it runs the
+instrumented job, streams per-iteration metrics (execution time, loss) into
+the TuningManager, and executes the ReconfigPlans the manager emits:
+
+  Type II   — swap the compiled step executable (SSR: knob re-jit, AOT-
+              compiled inside the measured reconfiguration window);
+  Type I-b  — relocate state: ODMR (reshard carried by the next step /
+              device_put under the new specs) vs. baseline checkpoint+restore;
+  state surgery — staleness queue resize when the ASP knob changes.
+
+``LMJob`` adapts the big-model path (repro.ps.stepfn); the paper-workload
+jobs (LogR/SVM/CNN) in benchmarks/workloads.py plug into the same loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knobs import setting_key
+from repro.core.reconfig import ReconfigPlan
+from repro.core.tuner import TuningManager
+
+
+@dataclass
+class LoopResult:
+    iterations: int
+    wall_time_s: float
+    final_loss: float
+    converged: bool
+    reconfig_total_s: float
+    history: list
+
+
+class SelfTuningLoop:
+    def __init__(self, tuner: TuningManager,
+                 step_builder: Callable[[dict], Callable],
+                 state_adapter: Callable | None = None,
+                 checkpoint_manager=None):
+        self.tuner = tuner
+        self.step_builder = step_builder
+        self.state_adapter = state_adapter or (lambda state, plan: state)
+        self.ckpt = checkpoint_manager
+        self._steps: dict[tuple, Callable] = {}
+
+    def _get_step(self, setting: dict, state, batch):
+        key = setting_key(setting)
+        if key not in self._steps:
+            fn = jax.jit(self.step_builder(setting))
+            # AOT compile so the cost lands in the reconfiguration window,
+            # not in the next iteration's measured time.
+            try:
+                fn = fn.lower(state, batch).compile()
+            except Exception:
+                pass  # fall back to compile-on-first-call
+            self._steps[key] = fn
+        return self._steps[key]
+
+    def run(self, state, batch_iter, max_iters: int = 10_000,
+            verbose: bool = False) -> tuple[LoopResult, object]:
+        tuner = self.tuner
+        batch = next(batch_iter)
+        step = self._get_step(tuner.current, state, batch)
+        t_start = time.perf_counter()
+        reconfig_total = 0.0
+        it = 0
+        while it < max_iters and not tuner.converged:
+            t0 = time.perf_counter()
+            state, metrics = step(state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            it += 1
+            tuner.record_iteration(loss, dt)
+            if self.ckpt is not None:
+                self.ckpt.maybe_save(state, it, {"loss": loss})
+            batch = next(batch_iter)
+
+            plan = tuner.maybe_advance()
+            if plan is not None:
+                r0 = time.perf_counter()
+                state = self.state_adapter(state, plan)
+                step = self._get_step(tuner.current, state, batch)
+                jax.block_until_ready(state)
+                rcost = time.perf_counter() - r0
+                reconfig_total += rcost
+                tuner.record_reconfig(plan, rcost)
+                if verbose:
+                    print(f"[reconfig@{it}] {plan.kinds} -> {tuner.current} "
+                          f"({rcost:.3f}s)", flush=True)
+            if verbose and it % 50 == 0:
+                print(f"[{it}] loss={loss:.4f} setting={tuner.current}",
+                      flush=True)
+        wall = time.perf_counter() - t_start
+        return LoopResult(
+            iterations=it, wall_time_s=wall,
+            final_loss=tuner.repo.latest_loss,
+            converged=tuner.converged,
+            reconfig_total_s=reconfig_total,
+            history=tuner.history,
+        ), state
+
+
+def make_staleness_adapter(queue_dtype=jnp.bfloat16, knob: str = "staleness",
+                           depth=lambda v: v, default=0):
+    """Grad-queue surgery when the ASP staleness/workers knob changes (a
+    Type II change that touches state shape). ``queue_dtype`` must match what
+    the job's step pushes (bf16 for the LM path, param dtype for the paper
+    workloads); ``depth`` maps the knob value to the queue length."""
+
+    def adapter(state, plan: ReconfigPlan):
+        old_s = depth(plan.old.get(knob, default))
+        new_s = depth(plan.new.get(knob, default))
+        if old_s == new_s:
+            return state
+        state = dict(state)
+        if new_s == 0:
+            state.pop("grad_queue", None)
+            return state
+        params = state["params"]
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((new_s,) + p.shape,
+                                queue_dtype or p.dtype), params)
+        if "grad_queue" in state and old_s > 0:
+            keep = min(old_s, new_s)
+            old_q = state["grad_queue"]
+            zeros = jax.tree_util.tree_map(
+                lambda z, q: z.at[-keep:].set(q[-keep:].astype(z.dtype)),
+                zeros, old_q)
+        state["grad_queue"] = zeros
+        return state
+
+    return adapter
+
+
+# default adapter for the LM path (bf16 queues, matching ps.stepfn)
+staleness_state_adapter = make_staleness_adapter(jnp.bfloat16)

@@ -1,0 +1,102 @@
+"""GP surrogate + loss-aware BO tests (paper §III)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bo import LossAwareBO, expected_improvement
+from repro.core.gp import GaussianProcess
+from repro.core.knobs import Knob, KnobSpace
+
+
+def test_gp_interpolates_clean_data():
+    X = np.linspace(0, 1, 8)[:, None]
+    y = np.sin(3 * X[:, 0])
+    gp = GaussianProcess(noise_var=1e-6).fit(X, y, optimize=False)
+    mu, sd = gp.predict(X)
+    assert np.max(np.abs(mu - y)) < 1e-3
+    assert np.all(sd >= 0)
+
+
+def test_gp_uncertainty_grows_off_data():
+    X = np.zeros((4, 1))
+    y = np.ones(4)
+    gp = GaussianProcess(noise_var=1e-4).fit(X, y, optimize=False)
+    _, sd_near = gp.predict(np.array([[0.0]]))
+    _, sd_far = gp.predict(np.array([[3.0]]))
+    assert sd_far[0] > sd_near[0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-3, 3), min_size=3, max_size=12),
+       st.floats(-3, 3))
+def test_property_ei_nonnegative(mus, best):
+    mu = np.asarray(mus)
+    sigma = np.abs(mu) * 0.3 + 0.1
+    ei = expected_improvement(mu, sigma, best)
+    assert np.all(ei >= 0)
+
+
+def test_ei_prefers_lower_mean_when_sigma_equal():
+    mu = np.array([1.0, 0.1])
+    sigma = np.array([0.3, 0.3])
+    ei = expected_improvement(mu, sigma, best=0.5)
+    assert ei[1] > ei[0]
+
+
+def _space():
+    return KnobSpace((
+        Knob("a", "ordinal", (1, 2, 4, 8)),
+        Knob("b", "nominal", ("x", "y", "z")),
+    ))
+
+
+def test_knob_encoding_shapes():
+    sp = _space()
+    v = sp.encode({"a": 4, "b": "y"})
+    assert len(v) == sp.dim() == 1 + 3
+    assert v[0] == pytest.approx(2 / 3)
+    assert v[1:] == [0.0, 1.0, 0.0]
+
+
+def test_bo_finds_good_region():
+    """Target: Y best at a=8, b='z'. After observing all settings once, the
+    suggestion should be (near-)optimal."""
+    sp = _space()
+    bo = LossAwareBO(sp, seed=0)
+
+    def true_Y(s):
+        return 10.0 - s["a"] + (0.0 if s["b"] == "z" else 5.0)
+
+    for s in sp.enumerate_all():
+        bo.observe(s, loss=1.0, Y=true_Y(s))
+    sugg, ei, _ = bo.suggest(current_loss=1.0)
+    assert true_Y(sugg) <= 3.0    # near the optimum (best is 2.0)
+
+
+def test_bo_loss_aware_input():
+    """The same setting can be valued differently at different losses."""
+    sp = KnobSpace((Knob("a", "ordinal", (1, 2)),))
+    bo = LossAwareBO(sp, seed=0)
+    # at high loss, a=2 is much better; at low loss both equal
+    for _ in range(3):
+        bo.observe({"a": 1}, loss=1.0, Y=100.0)
+        bo.observe({"a": 2}, loss=1.0, Y=10.0)
+        bo.observe({"a": 1}, loss=0.01, Y=5.0)
+        bo.observe({"a": 2}, loss=0.01, Y=5.0)
+    y_hi_1 = bo.predicted_Y({"a": 1}, loss=1.0)
+    y_hi_2 = bo.predicted_Y({"a": 2}, loss=1.0)
+    assert y_hi_2 < y_hi_1
+    y_lo_1 = bo.predicted_Y({"a": 1}, loss=0.01)
+    assert y_lo_1 < y_hi_1            # loss enters the input space
+
+
+def test_bo_diverged_window_is_penalized():
+    sp = KnobSpace((Knob("a", "ordinal", (1, 2)),))
+    bo = LossAwareBO(sp, seed=0)
+    bo.observe({"a": 1}, loss=1.0, Y=float("inf"))
+    bo.observe({"a": 2}, loss=1.0, Y=10.0)
+    bo.observe({"a": 2}, loss=0.9, Y=9.0)
+    sugg, _, _ = bo.suggest(current_loss=0.9)
+    assert sugg["a"] == 2

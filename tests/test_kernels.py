@@ -1,0 +1,111 @@
+"""Per-kernel shape/dtype sweeps: pallas_call (interpret=True) vs jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.mamba_scan import selective_scan, selective_scan_ref
+from repro.kernels.quant import (dequantize, dequantize_ref, quantize,
+                                 quantize_ref)
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd", [
+    (1, 64, 64, 2, 2, 64),
+    (2, 128, 128, 4, 2, 64),
+    (1, 128, 128, 8, 1, 128),
+    (1, 64, 256, 4, 4, 32),     # cross attention lengths
+    (2, 128, 128, 6, 2, 96),    # phi-3-vision head_dim
+    (1, 64, 64, 2, 2, 80),      # hubert head_dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, H, K, hd, causal, dtype):
+    q = _rand((B, Sq, H, hd), dtype)
+    k = _rand((B, Skv, K, hd), dtype)
+    v = _rand((B, Skv, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    G = H // K
+    ref = attention_ref(q, jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2),
+                        causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_blocks_equivalent():
+    """Block shape is a tuning knob, never a semantics knob."""
+    q = _rand((1, 128, 4, 64), jnp.float32)
+    k = _rand((1, 128, 2, 64), jnp.float32)
+    v = _rand((1, 128, 2, 64), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=True, block_q=32, block_k=64,
+                         interpret=True)
+    o2 = flash_attention(q, k, v, causal=True, block_q=128, block_k=32,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,D,N,chunk,bd", [
+    (1, 32, 64, 8, 8, 64),
+    (2, 64, 128, 16, 16, 64),
+    (1, 128, 256, 16, 64, 128),
+    (2, 96, 64, 4, 32, 32),     # chunk not dividing S -> auto-halved
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mamba_scan_sweep(B, S, D, N, chunk, bd, dtype):
+    x = _rand((B, S, D), dtype)
+    dt = jnp.abs(_rand((B, S, D), dtype)) * 0.1
+    Bm = _rand((B, S, N), dtype)
+    Cm = _rand((B, S, N), dtype)
+    A = -jnp.abs(_rand((D, N), jnp.float32)) - 0.1
+    y, h = selective_scan(x, dt, Bm, Cm, A, chunk=chunk, block_d=bd,
+                          interpret=True)
+    yr, hr = selective_scan_ref(x, dt, Bm, Cm, A)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=tol,
+                               rtol=tol)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("n,block", [(512, 128), (1024, 256), (4096, 512)])
+def test_quant_matches_ref(n, block):
+    x = _rand((n,), jnp.float32)
+    r = jnp.asarray(RNG.random(n), jnp.float32)
+    q, s = quantize(x, r, block=block, interpret=True)
+    qr, sr = quantize_ref(x, r, block=block)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    d = dequantize(q, s, block=block, interpret=True)
+    dr = dequantize_ref(qr, sr, block=block)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=1e-6)
+
+
+def test_quant_unbiased():
+    """Stochastic rounding is unbiased: mean reconstruction ~= input."""
+    x = jnp.full((256,), 0.3333, jnp.float32)
+    recon = []
+    for i in range(64):
+        r = jax.random.uniform(jax.random.PRNGKey(i), (256,))
+        q, s = quantize(x, r, block=256, interpret=True)
+        recon.append(np.asarray(dequantize(q, s, block=256, interpret=True)))
+    mean = np.mean(recon)
+    assert abs(mean - 0.3333) < 2e-3
+
+
+def test_quant_reconstruction_error_bounded():
+    x = _rand((1024,), jnp.float32)
+    r = jnp.asarray(RNG.random(1024), jnp.float32)
+    q, s = quantize(x, r, block=256, interpret=True)
+    d = dequantize(q, s, block=256, interpret=True)
+    per_block_max = np.abs(np.asarray(x)).reshape(4, 256).max(axis=1)
+    bound = np.repeat(per_block_max / 127.0, 256) * 1.0001
+    assert np.all(np.abs(np.asarray(d) - np.asarray(x)) <= bound)

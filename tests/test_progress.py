@@ -1,0 +1,87 @@
+"""Unit + property tests for the online progress estimator (paper §IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.progress import (estimate_remaining_time, fit_progress)
+
+
+def synth_curve(H, d, j0=0, n=12, eps_floor=1e-4):
+    """Generate (j, l) pairs exactly on the Eq. 3 curve."""
+    ls = np.geomspace(d * 0.95, max(d * 0.05, eps_floor), n)
+    js = j0 + (H / ls) * np.log(d / ls)
+    return js, ls
+
+
+def test_recovers_H_on_exact_curve():
+    H, d = 50.0, 2.0
+    js, ls = synth_curve(H, d)
+    iters = np.concatenate([[0.0], js])
+    losses = np.concatenate([[d], ls])
+    fit = fit_progress(iters, losses)
+    assert fit.valid
+    assert fit.H == pytest.approx(H, rel=0.25)
+
+
+def test_eq5_bound_on_d():
+    """d_i = min(2*l_j0, max subsequent losses) — Eq. 5 exactly."""
+    iters = [0, 1, 2, 3, 4]
+    losses = [1.0, 0.9, 0.8, 0.85, 0.7]
+    fit = fit_progress(iters, losses)
+    assert fit.d == pytest.approx(min(2 * 1.0, 0.9))
+    losses2 = [0.4, 0.9, 0.8, 0.85, 0.7]      # 2*l0 < max tail
+    fit2 = fit_progress(iters, losses2)
+    assert fit2.d == pytest.approx(0.8)
+
+
+def test_never_negative_remaining():
+    iters = [0, 1, 2, 3]
+    losses = [1.0, 1.1, 0.9, 1.05]            # noisy, barely moving
+    fit = fit_progress(iters, losses)
+    for eps in (0.5, 0.1, 1e-3):
+        assert fit.remaining_iters(eps) >= 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    H=st.floats(1.0, 500.0),
+    d=st.floats(0.1, 10.0),
+    eps_frac=st.floats(0.01, 0.5),
+)
+def test_property_positive_and_monotone_in_eps(H, d, eps_frac):
+    js, ls = synth_curve(H, d)
+    iters = np.concatenate([[0.0], js])
+    losses = np.concatenate([[d], ls])
+    fit = fit_progress(iters, losses)
+    if not fit.valid:
+        return
+    eps1 = d * eps_frac
+    eps2 = eps1 / 2.0
+    r1, r2 = fit.remaining_iters(eps1), fit.remaining_iters(eps2)
+    assert r1 >= 0 and r2 >= 0
+    assert r2 >= r1 - 1e-6       # tighter threshold needs >= iterations
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(1e-3, 10.0), min_size=3, max_size=20))
+def test_property_arbitrary_losses_never_crash(losses):
+    iters = list(range(len(losses)))
+    fit = fit_progress(iters, losses)
+    r = fit.remaining_iters(0.05)
+    assert r >= 0.0 or r == float("inf")
+
+
+def test_estimate_remaining_time_product():
+    H, d = 30.0, 1.0
+    js, ls = synth_curve(H, d)
+    iters = np.concatenate([[0.0], js])
+    losses = np.concatenate([[d], ls])
+    est = estimate_remaining_time(iters, losses, [0.5] * len(iters), eps=0.01)
+    assert est["Y"] == pytest.approx(0.5 * est["remaining_iters"])
+
+
+def test_converged_returns_zero():
+    iters = [0, 1, 2, 3]
+    losses = [0.5, 0.2, 0.1, 0.01]
+    fit = fit_progress(iters, losses)
+    assert fit.remaining_iters(0.05) == 0.0

@@ -1,0 +1,110 @@
+"""Reconfiguration machinery: classification, cost model, ODMR invariants,
+checkpoint round-trip (CKP/MDR baseline), elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import restore_pytree, save_pytree, latest_step
+from repro.core.reconfig import ReconfigCostModel, classify, plan
+from repro.distributed.sharding import single_device_meshspec, param_specs
+from repro.ps.odmr import relocate_now
+
+
+def test_classify_types():
+    old = {"mesh_split": "4x2", "remat": "none", "data_shards": 4}
+    assert classify(old, {**old, "mesh_split": "2x4"}) == ("I-b",)
+    assert classify(old, {**old, "remat": "full"}) == ("II",)
+    assert classify(old, {**old, "data_shards": 8}) == ("I-a",)
+    assert classify(old, {**old, "mesh_split": "2x4", "remat": "full"}) \
+        == ("I-b", "II")
+    assert classify(old, dict(old)) == ()
+
+
+def test_cost_model_running_average():
+    cm = ReconfigCostModel(default_cost_s=1.0)
+    assert cm.estimate(("I-b",)) == 1.0          # default before observations
+    cm.observe(("I-b",), 4.0)
+    cm.observe(("I-b",), 2.0)
+    assert cm.estimate(("I-b",)) == pytest.approx(3.0)
+    assert cm.estimate(("I-b", "II")) == pytest.approx(4.0)  # 3.0 + default
+
+
+def test_plan_method_selection():
+    p1 = plan({"mesh_split": "a"}, {"mesh_split": "b"}, use_odmr=True)
+    assert p1.method == "odmr" and p1.needs_relocation
+    p2 = plan({"mesh_split": "a"}, {"mesh_split": "b"}, use_odmr=False)
+    assert p2.method == "baseline"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_property_odmr_preserves_values(rows, cols, seed):
+    """Relocation must be a pure placement change: values identical."""
+    ms = single_device_meshspec()
+    rng = np.random.default_rng(seed)
+    tree = {"layers": {"mlp": {"wi": jnp.asarray(
+                rng.standard_normal((rows, cols)), jnp.float32)}},
+            "final_norm": {"scale": jnp.asarray(
+                rng.standard_normal((cols,)), jnp.float32)}}
+    specs = param_specs(tree, ms)
+    out = relocate_now(tree, specs, ms)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tree = {"params": {"w": jnp.asarray(rng.standard_normal((16, 8)),
+                                        jnp.float32),
+                       "e": jnp.asarray(rng.standard_normal((4,)),
+                                        jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    save_pytree(tree, str(tmp_path), step=7, extras={"loss": 0.5})
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out, meta = restore_pytree(template, str(tmp_path))
+    assert meta["step"] == 7 and meta["extras"]["loss"] == 0.5
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    cm = CheckpointManager(str(tmp_path), every=1, keep=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3, 4):
+        cm.maybe_save(tree, s)
+    assert latest_step(str(tmp_path)) == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert dirs == ["step_3", "step_4"]          # retention GC
+
+
+def test_checkpoint_partial_write_ignored(tmp_path):
+    """A crashed (tmp-prefixed) write must not be visible as a checkpoint —
+    the atomic-rename fault-tolerance contract."""
+    tree = {"w": jnp.zeros((4,))}
+    save_pytree(tree, str(tmp_path), step=1)
+    os.makedirs(tmp_path / ".tmp_step_2_999", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_elastic_restore_re_places(tmp_path):
+    """Restore under a (new) mesh spec: values preserved, placement applied —
+    the restart-on-different-topology path."""
+    ms = single_device_meshspec()
+    tree = {"layers": {"mlp": {"wi": jnp.arange(32, dtype=jnp.float32)
+                               .reshape(8, 4)}}}
+    save_pytree(tree, str(tmp_path), step=0)
+    template = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    out, _ = restore_pytree(template, str(tmp_path), ms=ms)
+    np.testing.assert_array_equal(
+        np.asarray(out["layers"]["mlp"]["wi"]),
+        np.asarray(tree["layers"]["mlp"]["wi"]))
