@@ -1,29 +1,56 @@
-"""Batched serving example: prefill a batch of prompts, then decode tokens
-with a shared KV cache — the serving path whose full-scale plans the
-multi-pod dry-run validates (decode_32k / long_500k cells).
+"""Continuous-batching serving example — the engine API in ~30 lines.
+
+Submits a handful of prompts with staggered arrivals, drains the engine,
+and prints per-request results.  For traffic-scale runs and online knob
+tuning use the launcher:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
+      --selftune
 
   PYTHONPATH=src:. python examples/serve_batch.py [--arch starcoder2-3b]
 """
 import argparse
-import subprocess
-import sys
+
+import jax
+import numpy as np
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    # The serving driver lives in the launch layer; this example simply runs
-    # it on the reduced config (CPU-sized).
-    cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--arch", args.arch, "--reduced",
-           "--batch", str(args.batch),
-           "--prompt-len", str(args.prompt_len),
-           "--gen", str(args.gen)]
-    raise SystemExit(subprocess.call(cmd))
+
+    from repro.configs.registry import get_config
+    from repro.models import lm
+    from repro.serving import (DEFAULT_SERVING_SETTING, Request,
+                               ServingEngine, serve_loop)
+
+    cfg = get_config(args.arch).reduced()          # CPU-sized
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    engine = ServingEngine(
+        params, cfg, dict(DEFAULT_SERVING_SETTING, max_batch=args.batch))
+
+    rng = np.random.default_rng(args.seed)
+    requests = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size,
+                                    (int(rng.integers(4, 25)),)).astype(np.int32),
+                max_new=args.gen,
+                arrival_s=0.05 * i)                # staggered arrivals
+        for i in range(2 * args.batch)
+    ]
+    stats = serve_loop(engine, requests)
+
+    for req in sorted(engine.finished, key=lambda r: r.rid):
+        print(f"req {req.rid}: prompt_len={len(req.prompt)} "
+              f"latency={req.latency_s:.3f}s tokens={req.tokens_out[:8]}...")
+    print(f"{stats['completed']} requests, {stats['tokens']} tokens, "
+          f"{stats['tokens_per_s']:.1f} tok/s "
+          f"(p50 latency {stats['p50_latency_s']:.3f}s)")
+    print("OK", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 regression gate: full offline test suite + serving bench smoke.
+#   scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q "$@"
+
+echo "== serving bench (smoke) =="
+# exits non-zero unless self-tuned >= fixed-default on >= 2/3 scenarios
+python benchmarks/bench_serving.py --smoke
+
+echo "CI OK"

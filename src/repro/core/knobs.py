@@ -54,6 +54,24 @@ class KnobSpace:
     def sample(self, rng: _random.Random) -> dict:
         return {k.name: rng.choice(k.values) for k in self.knobs}
 
+    def stratified_samples(self, rng: _random.Random, n: int) -> list[dict]:
+        """Latin-hypercube-style initialization pool: ``n`` settings that
+        jointly cover each knob's range (each ordinal knob's extremes are
+        guaranteed to appear once n >= 2).  Uniform random init can miss an
+        entire side of an ordinal knob with probability ((k-1)/k)^n — fatal
+        when the tuning budget is a short serving window."""
+        cols = []
+        for k in self.knobs:
+            m = len(k.values)
+            if k.kind == "ordinal" and m > 1 and n > 1:
+                idx = [round(i * (m - 1) / (n - 1)) for i in range(n)]
+            else:
+                idx = [i % m for i in range(n)]
+            rng.shuffle(idx)
+            cols.append([k.values[i] for i in idx])
+        names = self.names()
+        return [dict(zip(names, vals)) for vals in zip(*cols)]
+
     def neighbors(self, setting: dict, rng: _random.Random, n: int = 8):
         """Local perturbations (one knob moved) — candidate pool for EI."""
         out = []

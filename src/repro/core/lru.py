@@ -1,0 +1,69 @@
+"""Bounded LRU cache for compiled step executables.
+
+The tuner explores many settings over a long run; each distinct setting (and,
+in serving, each distinct prefill bucket / KV-pool shape) produces a compiled
+executable.  Unbounded, the cache grows with the exploration history and
+pins device/host memory for executables that will never run again.  Both the
+training loop and the serving engine cap it with this policy: recency is the
+right signal because the tuner revisits good settings and abandons bad ones.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+
+class LRUCache:
+    def __init__(self, capacity: int = 8):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key, default=None):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value):
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def get_or_create(self, key, factory: Callable):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        value = factory()
+        self.put(key, value)
+        return value
+
+    def __len__(self):
+        return len(self._d)
+
+    def __contains__(self, key):
+        return key in self._d
+
+
+def aot_compile(fn, *example_args):
+    """jax.jit + ahead-of-time lower/compile, falling back to
+    compile-on-first-call when lowering fails (donated-arg or abstract-shape
+    edge cases).  Shared by the training loop and the serving engine so the
+    compile cost lands inside the measured reconfiguration window instead of
+    the next iteration's time."""
+    import jax
+    jitted = jax.jit(fn)
+    try:
+        return jitted.lower(*example_args).compile()
+    except Exception:
+        return jitted

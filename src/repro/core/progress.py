@@ -112,3 +112,23 @@ def estimate_remaining_time(iters, losses, iter_times, eps: float) -> dict:
             r = max(r, r_emp)
     return {"fit": fit, "t_bar": t_bar, "remaining_iters": r,
             "Y": t_bar * r if np.isfinite(r) else float("inf")}
+
+
+@dataclass
+class RemainingTimeObjective:
+    """Training objective (paper §IV): Y = predicted remaining seconds until
+    the rolling loss reaches ``eps``.  The per-iteration context channel is
+    the training loss itself."""
+    eps: float
+    converge_window: int = 8
+
+    def window_score(self, iters, values, times) -> dict:
+        return estimate_remaining_time(iters, values, times, self.eps)
+
+    def peek(self, iters, values, times) -> dict:
+        return estimate_remaining_time(iters, values, times, self.eps)
+
+    def is_converged(self, repo) -> bool:
+        if len(repo.records) < self.converge_window:
+            return False
+        return repo.rolling_loss(self.converge_window) <= self.eps

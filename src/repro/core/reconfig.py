@@ -22,15 +22,26 @@ MESH_KNOBS = ("mesh_split",)                     # Type I-b
 DATA_KNOBS = ("data_shards",)                    # Type I-a
 # everything else is Type II
 
+# Per-type cost seeds (seconds) used before any observation lands.  The types
+# differ by orders of magnitude in this system: a Type II swap is an XLA
+# recompile (cold: seconds), a Type I-b ODMR relocation is a device_put /
+# collective (tens of ms), and Type I-a re-partitions the input pipeline.
+DEFAULT_KIND_COSTS = {"II": 2.0, "I-b": 0.02, "I-a": 0.5}
 
-def classify(old: dict, new: dict) -> tuple[str, ...]:
+
+def classify(old: dict, new: dict, mesh_knobs: tuple = MESH_KNOBS,
+             data_knobs: tuple = DATA_KNOBS) -> tuple[str, ...]:
+    """Classify the X -> X' transition.  ``mesh_knobs``/``data_knobs`` let a
+    subsystem declare its own knob classes — the serving engine classifies
+    KV-pool re-layout knobs (pool size, cache dtype) as Type I-b because
+    they relocate model data (the cache), not the executable."""
     kinds = set()
     for k in new:
         if old.get(k) == new[k]:
             continue
-        if k in MESH_KNOBS:
+        if k in mesh_knobs:
             kinds.add("I-b")
-        elif k in DATA_KNOBS:
+        elif k in data_knobs:
             kinds.add("I-a")
         else:
             kinds.add("II")
@@ -39,26 +50,39 @@ def classify(old: dict, new: dict) -> tuple[str, ...]:
 
 @dataclass
 class ReconfigCostModel:
-    """Running average of observed reconfiguration costs per type."""
-    totals: dict = field(default_factory=dict)
+    """Exponential-decay running average of observed per-type costs.
+
+    A plain all-time mean never forgets the cold-compile outlier: the first
+    Type II swap pays a full XLA compile, later swaps hit the executable
+    cache and cost ~nothing, and the mean stays pessimistic forever (the
+    tuner then under-explores).  ``decay`` is the weight of the newest
+    observation; 0.5 keeps the 2-observation behaviour equal to the mean
+    while tracking warm costs within a few swaps.
+    """
+    avgs: dict = field(default_factory=dict)
     counts: dict = field(default_factory=dict)
-    default_cost_s: float = 1.0
+    default_cost_s: float | None = None   # uniform override for the seeds
+    decay: float = 0.5
 
     def observe(self, kinds: tuple, cost_s: float):
+        share = cost_s / max(len(kinds), 1)
         for k in kinds or ("II",):
-            self.totals[k] = self.totals.get(k, 0.0) + cost_s / max(len(kinds), 1)
+            if k in self.avgs:
+                self.avgs[k] = (1 - self.decay) * self.avgs[k] \
+                    + self.decay * share
+            else:
+                self.avgs[k] = share
             self.counts[k] = self.counts.get(k, 0) + 1
+
+    def _seed(self, kind: str) -> float:
+        if self.default_cost_s is not None:
+            return self.default_cost_s
+        return DEFAULT_KIND_COSTS.get(kind, 1.0)
 
     def estimate(self, kinds: tuple) -> float:
         if not kinds:
             return 0.0
-        tot = 0.0
-        for k in kinds:
-            if self.counts.get(k):
-                tot += self.totals[k] / self.counts[k]
-            else:
-                tot += self.default_cost_s
-        return tot
+        return sum(self.avgs.get(k, self._seed(k)) for k in kinds)
 
 
 @dataclass(frozen=True)
@@ -73,7 +97,9 @@ class ReconfigPlan:
         return "I-b" in self.kinds or "I-a" in self.kinds
 
 
-def plan(old: dict, new: dict, use_odmr: bool = True) -> ReconfigPlan:
-    kinds = classify(old, new)
+def plan(old: dict, new: dict, use_odmr: bool = True,
+         mesh_knobs: tuple = MESH_KNOBS,
+         data_knobs: tuple = DATA_KNOBS) -> ReconfigPlan:
+    kinds = classify(old, new, mesh_knobs, data_knobs)
     return ReconfigPlan(kinds=kinds, old=dict(old), new=dict(new),
                         method="odmr" if use_odmr else "baseline")

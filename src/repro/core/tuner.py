@@ -23,7 +23,8 @@ from repro.core import reconfig as rc
 from repro.core.bo import LossAwareBO
 from repro.core.knobs import KnobSpace, setting_key
 from repro.core.metrics import MetricsRepository
-from repro.core.progress import estimate_remaining_time, fit_progress
+from repro.core.objective import Objective
+from repro.core.progress import RemainingTimeObjective
 
 
 @dataclass
@@ -40,9 +41,19 @@ class TunerConfig:
 
 
 class TuningManager:
-    def __init__(self, space: KnobSpace, x0: dict, cfg: TunerConfig):
+    """Drives one job — training *or* serving — as decided by ``objective``
+    (default: the paper's remaining-time-to-convergence training objective).
+    The driver's ``record_iteration(value, time)`` context channel must match
+    the objective: training loss vs offered load."""
+
+    def __init__(self, space: KnobSpace, x0: dict, cfg: TunerConfig,
+                 objective: Objective | None = None,
+                 reconfig_knob_classes: dict | None = None):
         self.space = space
         self.cfg = cfg
+        self.objective = objective or RemainingTimeObjective(
+            cfg.eps, cfg.converge_window)
+        self._knob_classes = reconfig_knob_classes or {}
         self.a = cfg.a or max(2, 3 * cfg.n_workers)
         self.rng = _random.Random(cfg.seed)
         self.bo = LossAwareBO(space, seed=cfg.seed)
@@ -50,7 +61,10 @@ class TuningManager:
         self.costs = rc.ReconfigCostModel()
         self.x0 = dict(x0)
         self.current = dict(x0)
-        self._init_queue = [self.space.sample(self.rng) for _ in range(cfg.b)]
+        # stratified (LHS-style) init: the b settings jointly cover every
+        # knob's range, so the GP sees both extremes of each ordinal knob
+        # before the online phase starts
+        self._init_queue = self.space.stratified_samples(self.rng, cfg.b)
         self._window_count = 0
         self._iter = 0
         self._next_boundary = self.a
@@ -71,9 +85,7 @@ class TuningManager:
 
     @property
     def converged(self) -> bool:
-        if len(self.repo.records) < self.cfg.converge_window:
-            return False
-        return self.repo.rolling_loss(self.cfg.converge_window) <= self.cfg.eps
+        return self.objective.is_converged(self.repo)
 
     # --------------------------------------------------------- window close
     def _close_window(self):
@@ -81,7 +93,7 @@ class TuningManager:
         if len(w.iters) < 2:
             return
         its, losses, times = self.repo.clean_window(w)
-        est = estimate_remaining_time(its, losses, times, self.cfg.eps)
+        est = self.objective.window_score(its, losses, times)
         start_loss = losses[0]
         self.bo.observe(w.setting, start_loss, est["Y"])
         self.history.append({
@@ -103,7 +115,7 @@ class TuningManager:
 
         if self._init_queue:
             nxt = self._init_queue.pop(0)
-            plan = rc.plan(self.current, nxt, self.cfg.use_odmr)
+            plan = self._plan(nxt)
             self._switch_to(nxt)
             self._next_boundary = self._iter + self.a
             return plan
@@ -115,7 +127,7 @@ class TuningManager:
         x_new, ei_s, best_s = self.bo.suggest(cur_loss, self.current)
         stay = setting_key(x_new) == setting_key(self.current)
         if not stay:
-            plan = rc.plan(self.current, x_new, self.cfg.use_odmr)
+            plan = self._plan(x_new)
             r_cost = self.costs.estimate(plan.kinds)
             # hysteresis: noisy Y observations inflate EI; require the
             # improvement to also be a meaningful fraction of the predicted
@@ -135,6 +147,10 @@ class TuningManager:
         self._next_boundary = self._iter + self.a * self._a_scale
         return None
 
+    def _plan(self, new: dict) -> rc.ReconfigPlan:
+        return rc.plan(self.current, new, self.cfg.use_odmr,
+                       **self._knob_classes)
+
     def _switch_to(self, setting: dict):
         self.current = dict(setting)
         self.repo.begin_window(self.current, self.repo.latest_loss)
@@ -148,7 +164,7 @@ class TuningManager:
         w = self.repo.windows_list[-1]
         if len(w.iters) >= 2:
             its, losses, times = self.repo.clean_window(w)
-            est = estimate_remaining_time(its, losses, times, self.cfg.eps)
+            est = self.objective.peek(its, losses, times)
             return {"iteration": self._iter, "loss": self.repo.latest_loss,
                     "remaining_iters": est["remaining_iters"],
                     "remaining_time_s": est["Y"], "phase": self.phase,

@@ -1,15 +1,22 @@
-"""Serving launcher: batched prefill + decode on the local devices.
+"""Serving launcher: continuous-batching engine, optionally self-tuning.
 
+  # fixed setting (engine, max_batch=4):
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+      --batch 4
 
-The full-config serving plans (decode_32k / long_500k cells) are validated by
-the dry-run; this driver actually runs the reduced configs end-to-end and
-reports tokens/s.
+  # self-tuning under a Poisson workload (the paper's online loop applied
+  # to inference traffic):
+  PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
+      --selftune
+
+Attention-family archs (dense/moe) run the continuous-batching engine;
+ssm/hybrid/vlm archs fall back to the legacy one-shot batched prefill+decode
+path until the engine grows state-pool support (ROADMAP open item).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -17,28 +24,77 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def _engine_main(args, cfg, params):
+    from repro.core.tuner import TunerConfig, TuningManager
+    from repro.serving import (DEFAULT_SERVING_SETTING,
+                               SERVING_RELAYOUT_KNOBS, ServingEngine,
+                               ServingObjective, serve_loop,
+                               serving_knob_space)
+    from repro.serving.workload import make_trace
 
-    from repro.configs.registry import get_config
+    if args.prompt_len + args.gen > args.max_seq:
+        raise SystemExit(f"--prompt-len + --gen ({args.prompt_len}+{args.gen})"
+                         f" must fit in --max-seq ({args.max_seq})")
+    trace_kw = {}
+    max_prompt = args.prompt_len
+    if args.scenario == "mixed_lengths":
+        # the long mode has its own prompt-length range; cap it so every
+        # generated request fits the slot capacity
+        cap = args.max_seq - args.gen
+        trace_kw["long_lens"] = (min(32, cap), min(56, cap))
+        max_prompt = max(max_prompt, trace_kw["long_lens"][1])
+    space = serving_knob_space(max_batch_ceiling=max(8, args.batch),
+                               include_batches=(args.batch,))
+    setting = dict(DEFAULT_SERVING_SETTING, max_batch=args.batch)
+    engine = ServingEngine(params, cfg, setting, max_seq=args.max_seq)
+    if not args.cold:
+        t0 = time.perf_counter()
+        # fixed mode never leaves its setting — warm only its executables
+        engine.warm_start(space if args.selftune else None,
+                          max_prompt=max_prompt)
+        print(f"warm-start: {len(engine._steps)} executables in "
+              f"{time.perf_counter() - t0:.1f}s", flush=True)
+    trace = make_trace(args.scenario, args.rate, args.duration,
+                       vocab=cfg.vocab_size, seed=args.seed,
+                       prompt_lens=(4, args.prompt_len),
+                       max_news=(4, args.gen), **trace_kw)
+    tuner = None
+    if args.selftune:
+        tuner = TuningManager(
+            space, setting,
+            TunerConfig(eps=1e-6, a=args.window, b=args.init_settings,
+                        seed=args.seed),
+            objective=ServingObjective(engine, slo_p99_s=args.slo),
+            reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS})
+
+    mode = "selftune" if args.selftune else f"fixed(max_batch={args.batch})"
+    print(f"arch={cfg.name} scenario={args.scenario} rate={args.rate}rps "
+          f"duration={args.duration}s mode={mode}")
+    stats = serve_loop(engine, trace, tuner, verbose=True)
+    print(f"served {stats['completed']}/{stats['requests']} requests, "
+          f"{stats['tokens']} tokens in {stats['wall_s']:.1f}s "
+          f"({stats['tokens_per_s']:.1f} tok/s)")
+    if stats["p50_latency_s"] is not None:
+        print(f"latency p50={stats['p50_latency_s']:.2f}s "
+              f"p99={stats['p99_latency_s']:.2f}s "
+              f"ttft p50={stats['p50_ttft_s']:.2f}s")
+    if args.selftune:
+        print(f"reconfigurations: {stats['reconfig_count']} "
+              f"({stats['reconfig_total_s']:.2f}s total), "
+              f"final setting: {stats['final_setting']}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(stats, f, indent=1, default=str)
+    print("OK", flush=True)
+
+
+def _legacy_main(args, cfg, params):
+    """One-shot batched prefill + decode (pre-engine path) — still the only
+    decode driver for ssm/hybrid/vlm families."""
     from repro.models import lm
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if cfg.family == "encoder":
-        raise SystemExit("encoder-only arch has no decode step")
     B, P, G = args.batch, args.prompt_len, args.gen
     total = P + G
-
-    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
     rng = np.random.default_rng(args.seed)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
     batch = {"tokens": prompt}
@@ -76,13 +132,70 @@ def main():
     t_decode = time.perf_counter() - t0
 
     out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"arch={cfg.name} batch={B} prompt={P} gen={G} (legacy one-shot)")
     print(f"prefill: {t_prefill*1000:.1f} ms "
           f"({B*P/t_prefill:.0f} tok/s)")
     print(f"decode:  {t_decode*1000:.1f} ms total, "
           f"{B*G/t_decode:.0f} tok/s, {t_decode/G*1000:.1f} ms/step")
     print(f"sample continuation (req 0): {out[0, :16].tolist()}")
     print("OK", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixed max_batch (engine) / batch size (legacy)")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    # engine / self-tuning
+    ap.add_argument("--selftune", action="store_true",
+                    help="tune serving knobs online while serving")
+    ap.add_argument("--scenario", default="poisson",
+                    choices=("poisson", "bursty", "diurnal", "mixed_lengths"),
+                    help="traffic shape")
+    ap.add_argument("--rate", type=float, default=40.0,
+                    help="mean request arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=4.0,
+                    help="length of the arrival window (s)")
+    ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--window", type=int, default=40,
+                    help="tuner iterations per setting window (a)")
+    ap.add_argument("--init-settings", type=int, default=5,
+                    help="random settings in the tuner init phase (b)")
+    ap.add_argument("--slo", type=float, default=3.0,
+                    help="p99 latency SLO (s) for the serving objective")
+    ap.add_argument("--legacy", action="store_true",
+                    help="force the pre-engine one-shot path")
+    ap.add_argument("--cold", action="store_true",
+                    help="skip the startup executable warm-up (reconfig "
+                         "costs then include cold XLA compiles)")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs.registry import get_config
+    from repro.models import lm
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.family == "encoder":
+        raise SystemExit("encoder-only arch has no decode step")
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
+    use_engine = (not args.legacy
+                  and cfg.family in ServingEngine.SUPPORTED_FAMILIES)
+    if args.selftune and not use_engine:
+        raise SystemExit(f"--selftune needs the engine (families "
+                         f"{ServingEngine.SUPPORTED_FAMILIES}); "
+                         f"{cfg.name} is family={cfg.family}")
+    if use_engine:
+        _engine_main(args, cfg, params)
+    else:
+        _legacy_main(args, cfg, params)
 
 
 if __name__ == "__main__":

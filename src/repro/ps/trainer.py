@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.knobs import setting_key
+from repro.core.lru import LRUCache, aot_compile
 from repro.core.reconfig import ReconfigPlan
 from repro.core.tuner import TuningManager
 
@@ -41,25 +42,19 @@ class SelfTuningLoop:
     def __init__(self, tuner: TuningManager,
                  step_builder: Callable[[dict], Callable],
                  state_adapter: Callable | None = None,
-                 checkpoint_manager=None):
+                 checkpoint_manager=None, step_cache_size: int = 8):
         self.tuner = tuner
         self.step_builder = step_builder
         self.state_adapter = state_adapter or (lambda state, plan: state)
         self.ckpt = checkpoint_manager
-        self._steps: dict[tuple, Callable] = {}
+        # bounded: the tuner's exploration history would otherwise pin one
+        # executable per visited setting forever
+        self._steps = LRUCache(step_cache_size)
 
     def _get_step(self, setting: dict, state, batch):
-        key = setting_key(setting)
-        if key not in self._steps:
-            fn = jax.jit(self.step_builder(setting))
-            # AOT compile so the cost lands in the reconfiguration window,
-            # not in the next iteration's measured time.
-            try:
-                fn = fn.lower(state, batch).compile()
-            except Exception:
-                pass  # fall back to compile-on-first-call
-            self._steps[key] = fn
-        return self._steps[key]
+        return self._steps.get_or_create(
+            setting_key(setting),
+            lambda: aot_compile(self.step_builder(setting), state, batch))
 
     def run(self, state, batch_iter, max_iters: int = 10_000,
             verbose: bool = False) -> tuple[LoopResult, object]:

@@ -1,0 +1,17 @@
+"""Self-tuning serving: continuous batching + online knob tuning.
+
+The inference-side counterpart of the paper's self-tuning training loop.
+While the engine serves traffic, the same loss-aware BO machinery
+(repro.core.tuner with a ServingObjective) learns which serving setting —
+batch ceiling, prefill chunking, KV quantization/layout — is more efficient
+for the *current* load and applies it online: executable swaps (Type II)
+and KV-pool re-layouts (Type I-b).
+"""
+from repro.serving.engine import Request, ServingEngine, serve_loop
+from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
+                                 SERVING_RELAYOUT_KNOBS, serving_knob_space)
+from repro.serving.objective import ServingObjective
+
+__all__ = ["Request", "ServingEngine", "serve_loop", "serving_knob_space",
+           "DEFAULT_SERVING_SETTING", "SERVING_RELAYOUT_KNOBS",
+           "ServingObjective"]

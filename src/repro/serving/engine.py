@@ -1,0 +1,447 @@
+"""Continuous-batching inference engine with online-reconfigurable knobs.
+
+Architecture (the serving half of the paper's Fig. 3):
+
+  * a FIFO request queue with an admission policy: at most ``max_batch``
+    requests are in flight; when decodes are running, at most one prefill is
+    admitted per scheduling quantum (bounded decode stall);
+  * a slot-based KV-cache pool: a single stacked cache of ``n_slots``
+    sequences (repro.models.lm cache layout).  A request owns one slot from
+    admission to completion; freed slots are recycled without touching the
+    other slots' state (continuous batching, no generation barrier);
+  * interleaved prefill/decode: prefill runs per request at batch 1, padded
+    to a multiple of ``prefill_chunk`` (bounds the number of prefill
+    executables), and writes its KV into the slot; decode advances *all*
+    live slots one token per quantum;
+  * online reconfiguration: Type II = swap the AOT-compiled decode/prefill
+    executables (bounded LRU, shared policy with the training loop); Type
+    I-b = ODMR-style KV-pool re-layout — allocate the pool for the new
+    ``max_batch``/``cache_dtype``, relocate live slots, never quiesce the
+    queue.
+
+The engine is knob-driven but tuner-agnostic: ``serve_loop`` wires it to a
+TuningManager exactly the way repro.ps.trainer wires the training job.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lru import LRUCache, aot_compile
+from repro.core.reconfig import (ReconfigPlan, classify as rc_classify,
+                                 plan as rc_plan)
+from repro.kernels.quant import dequantize_ref, quantize_ref
+from repro.models import lm
+from repro.models.lm import ModelKnobs
+from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
+                                 SERVING_RELAYOUT_KNOBS)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32 token ids
+    max_new: int                  # tokens to generate (>= 1)
+    arrival_s: float = 0.0        # virtual arrival time (trace replay)
+    # engine-filled:
+    submit_s: float | None = None
+    first_token_s: float | None = None
+    done_s: float | None = None
+    tokens_out: list = field(default_factory=list)
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.done_s is None else self.done_s - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float | None:
+        return (None if self.first_token_s is None
+                else self.first_token_s - self.arrival_s)
+
+
+def _cache_dtype(setting: dict):
+    return jnp.float32 if setting.get("cache_dtype") == "f32" else jnp.bfloat16
+
+
+class ServingEngine:
+    SUPPORTED_FAMILIES = ("dense", "moe")
+
+    def __init__(self, params, cfg, setting: dict | None = None, *,
+                 max_seq: int = 96, ms=None, step_cache_size: int = 24):
+        if cfg.family not in self.SUPPORTED_FAMILIES:
+            raise NotImplementedError(
+                f"serving engine supports {self.SUPPORTED_FAMILIES} for now; "
+                f"got family={cfg.family!r} (ssm/hybrid state pools are a "
+                f"ROADMAP open item)")
+        self.params = params
+        self.cfg = cfg
+        self.ms = ms
+        self.max_seq = max_seq
+        self.setting = dict(setting or DEFAULT_SERVING_SETTING)
+        # compiled executables: decode per (n_slots, dtype), prefill per
+        # (bucket, k_chunk, dtype) — same bounded-LRU policy as the trainer
+        self._steps = LRUCache(step_cache_size)
+        self.queue: deque[Request] = deque()
+        self._alloc_pool(self.setting["max_batch"])
+        self.clock = 0.0              # driver-supplied wall time
+        # accounting (invariants are tested against these)
+        self.submitted: list[int] = []
+        self.finished: list[Request] = []
+        self.total_tokens = 0
+        self.ticks = 0
+
+    # ----------------------------------------------------------- pool mgmt
+    def _alloc_pool(self, n_slots: int):
+        dt = _cache_dtype(self.setting)
+        shapes = lm.init_cache_shapes(self.cfg, n_slots, self.max_seq)
+        self.pool = {k: jnp.zeros(s.shape, dt) for k, s in shapes.items()}
+        self.n_slots = n_slots
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int32)   # next KV write position
+        self.slot_tok = np.zeros(n_slots, np.int32)   # last sampled token
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def load(self) -> int:
+        return self.n_active + self.queue_depth
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def _free_slot(self):
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    # ----------------------------------------------------------- lifecycle
+    def submit(self, req: Request, now: float | None = None):
+        if req.max_new < 1:
+            raise ValueError("max_new must be >= 1")
+        if len(req.prompt) + req.max_new > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt({len(req.prompt)}) + "
+                f"max_new({req.max_new}) exceeds max_seq({self.max_seq})")
+        req.submit_s = self.clock if now is None else now
+        self.queue.append(req)
+        self.submitted.append(req.rid)
+
+    # ----------------------------------------------------- compiled steps
+    def _decode_exec(self):
+        key = ("decode", self.n_slots, self.setting["cache_dtype"])
+
+        def build():
+            cfg, ms = self.cfg, self.ms
+
+            def f(params, cache, tok, pos):
+                return lm.decode_step(params, cache, tok, pos, cfg, ms)
+
+            # AOT: compile inside the reconfig window, not mid-tick
+            tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
+            return aot_compile(f, self.params, self.pool, tok, pos)
+
+        return self._steps.get_or_create(key, build)
+
+    def _prefill_exec(self, bucket: int):
+        key = ("prefill", bucket, self.setting["k_chunk"])
+
+        def build():
+            cfg, ms = self.cfg, self.ms
+            kn = ModelKnobs(k_chunk=self.setting["k_chunk"])
+
+            def f(params, tokens, last_idx):
+                hidden, _, cache = lm.forward(params, {"tokens": tokens},
+                                              cfg, ms, kn, mode="prefill")
+                last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1,
+                                                    axis=1)
+                return lm.logits_fn(params, last, cfg, ms)[:, 0], cache
+
+            tk = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+            ix = jax.ShapeDtypeStruct((), jnp.int32)
+            return aot_compile(f, self.params, tk, ix)
+
+        return self._steps.get_or_create(key, build)
+
+    # -------------------------------------------------------------- admit
+    def _bucket(self, plen: int, chunk: int | None = None) -> int:
+        chunk = chunk or self.setting["prefill_chunk"]
+        return min(-(-plen // chunk) * chunk, self.max_seq)
+
+    def _quant_exec(self, bucket: int):
+        """int8 KV storage: per-(layer,position) blockwise quantization via
+        the kernels/quant schedule (jnp oracle on CPU).  Compiled per prefill
+        bucket — a variable-length eager version would trigger per-prompt
+        XLA op compiles on every admission."""
+        key = ("quant", bucket)
+
+        def build():
+            block = max(self.cfg.n_kv_heads * self.cfg.hd, 1)
+
+            def f(kv):                       # (L, bucket, K, hd)
+                flat = kv.reshape(-1).astype(jnp.float32)
+                half = jnp.full(flat.shape, 0.5, jnp.float32)  # det. rounding
+                q, scales = quantize_ref(flat, half, block=block)
+                return dequantize_ref(q, scales, block=block).reshape(kv.shape)
+
+            return jax.jit(f)
+
+        return self._steps.get_or_create(key, build)
+
+    def _admit(self, req: Request):
+        slot = self._free_slot()
+        assert slot is not None
+        P = len(req.prompt)
+        bucket = self._bucket(P)
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :P] = req.prompt
+        logits, pcache = self._prefill_exec(bucket)(
+            self.params, jnp.asarray(padded), jnp.asarray(P - 1, jnp.int32))
+        for k in ("k", "v"):
+            kv = pcache[k][:, 0]                        # (L, bucket, K, hd)
+            if self.setting["quant"] == "int8":
+                kv = self._quant_exec(bucket)(kv)
+            self.pool[k] = self.pool[k].at[:, slot, :P].set(
+                kv[:, :P].astype(self.pool[k].dtype))
+        tok = int(jnp.argmax(logits[0]))
+        req.tokens_out = [tok]
+        req.first_token_s = self.clock
+        self.total_tokens += 1
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = P
+        self.slot_tok[slot] = tok
+        if len(req.tokens_out) >= req.max_new:
+            self._complete(slot)
+
+    def _complete(self, slot: int):
+        req = self.slot_req[slot]
+        req.done_s = self.clock
+        self.finished.append(req)
+        self.slot_req[slot] = None
+
+    # ---------------------------------------------------------------- tick
+    def step(self, now: float | None = None) -> dict:
+        """One scheduling quantum.  Returns tick metrics for the driver."""
+        if now is not None:
+            self.clock = now
+        t0 = time.perf_counter()
+        self.ticks += 1
+        tokens = 0
+
+        # admission: fill an idle engine greedily; interleave one prefill
+        # per quantum while decodes are running
+        had_decodes = self.n_active > 0
+        admit_budget = 1 if had_decodes else self.setting["max_batch"]
+        while (self.queue and admit_budget > 0
+               and self.n_active < self.setting["max_batch"]
+               and self._free_slot() is not None):
+            self._admit(self.queue.popleft())
+            tokens += 1
+            admit_budget -= 1
+
+        # decode: advance every live slot by one token
+        if self.n_active > 0:
+            tok = jnp.asarray(self.slot_tok[:, None])
+            pos = jnp.asarray(self.slot_pos)
+            logits, self.pool = self._decode_exec()(
+                self.params, self.pool, tok, pos)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            for slot, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                self.slot_pos[slot] += 1
+                self.slot_tok[slot] = nxt[slot]
+                req.tokens_out.append(int(nxt[slot]))
+                tokens += 1
+                self.total_tokens += 1
+                if (len(req.tokens_out) >= req.max_new
+                        or self.slot_pos[slot] >= self.max_seq - 1):
+                    self._complete(slot)
+
+        # a shrink that had to wait for live slots (relayout keeps every
+        # in-flight request) completes once the backlog drains; otherwise
+        # decode keeps paying for an oversized pool
+        if (self.n_slots > self.setting["max_batch"]
+                and self.n_active <= self.setting["max_batch"]):
+            self._relayout_pool()
+
+        dt = time.perf_counter() - t0
+        return {"dt": dt, "tokens": tokens, "active": self.n_active,
+                "queued": self.queue_depth, "load": self.load,
+                "idle": tokens == 0 and not self.has_work()}
+
+    # ------------------------------------------------------------ reconfig
+    def warm_start(self, space=None, max_prompt: int | None = None):
+        """Pre-compile the executables the knob space can reach (server
+        startup warmup, standard serving practice): decode per
+        (max_batch, cache_dtype), prefill per (bucket, k_chunk).  After
+        this, online Type II reconfigurations are warm executable swaps —
+        the regime the decaying ReconfigCostModel is built to track.
+        ``space=None`` warms only the current (frozen) setting."""
+        assert self.n_active == 0, "warm_start before serving, not during"
+        if space is None:
+            values = {k: (v,) for k, v in self.setting.items()}
+        else:
+            values = {k.name: k.values for k in space.knobs}
+        save_setting = dict(self.setting)
+        chunks = values.get("prefill_chunk", (save_setting["prefill_chunk"],))
+        hi = min(max_prompt or self.max_seq, self.max_seq)
+        buckets = sorted({self._bucket(p, c)
+                          for c in chunks for p in range(1, hi + 1)})
+        # everything warmed must fit, or we would evict what we just built
+        planned = (len(values.get("max_batch", (1,)))
+                   * len(values.get("cache_dtype", (1,)))
+                   + len(values.get("k_chunk", (1,))) * len(buckets)
+                   + (len(buckets) if "int8" in values.get("quant", ())
+                      else 0))
+        self._steps.capacity = max(self._steps.capacity, planned + 2)
+        for mb in values.get("max_batch", (self.setting["max_batch"],)):
+            for cd in values.get("cache_dtype",
+                                 (self.setting["cache_dtype"],)):
+                self.setting.update(max_batch=mb, cache_dtype=cd)
+                self._alloc_pool(mb)
+                self._decode_exec()
+        for kc in values.get("k_chunk", (save_setting["k_chunk"],)):
+            self.setting["k_chunk"] = kc
+            for b in buckets:
+                self._prefill_exec(b)
+        if "int8" in values.get("quant", ()):
+            for b in buckets:
+                self._quant_exec(b)
+        self.setting = save_setting
+        self._alloc_pool(self.setting["max_batch"])
+
+    def reconfigure(self, new_setting: dict) -> float:
+        """Plan + execute a switch to ``new_setting`` (classifying the
+        engine's pool knobs as Type I-b).  Returns the observed cost."""
+        p = rc_plan(self.setting, dict(new_setting),
+                    mesh_knobs=SERVING_RELAYOUT_KNOBS)
+        return self.apply_plan(p)
+
+    def apply_plan(self, plan: ReconfigPlan) -> float:
+        """Execute a reconfiguration; returns its observed cost (seconds).
+
+        Type I-b: ODMR-style pool re-layout (new ``max_batch`` /
+        ``cache_dtype``) — live slots are relocated into the new pool, the
+        queue keeps filling, nothing is dropped.  Type II: the decode
+        executable for the new setting is AOT-compiled inside this window.
+
+        The relayout decision is re-derived here with the engine's own knob
+        classes rather than trusted from ``plan.kinds`` — a tuner wired
+        without them would otherwise leave the pool behind the setting.
+        """
+        t0 = time.perf_counter()
+        kinds = rc_classify(self.setting, plan.new,
+                            mesh_knobs=SERVING_RELAYOUT_KNOBS)
+        self.setting = dict(plan.new)
+        if "I-b" in kinds:
+            self._relayout_pool()
+        # warm the hot-path executable for the new setting (SSR)
+        self._decode_exec()
+        jax.block_until_ready(self.pool)
+        return time.perf_counter() - t0
+
+    def _relayout_pool(self):
+        live = [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
+        n_new = max(self.setting["max_batch"], len(live))
+        old_pool = self.pool
+        old_pos, old_tok = self.slot_pos, self.slot_tok
+        self._alloc_pool(n_new)
+        for new_slot, (old_slot, req) in enumerate(live):
+            for k in old_pool:
+                self.pool[k] = self.pool[k].at[:, new_slot].set(
+                    old_pool[k][:, old_slot].astype(self.pool[k].dtype))
+            self.slot_req[new_slot] = req
+            self.slot_pos[new_slot] = old_pos[old_slot]
+            self.slot_tok[new_slot] = old_tok[old_slot]
+        if self.ms is not None:
+            # place the new pool per the mesh (single transition, paper §V)
+            from repro.distributed.sharding import param_specs
+            from repro.ps.odmr import relocate_now
+            self.pool = relocate_now(self.pool,
+                                     param_specs(self.pool, self.ms), self.ms)
+
+
+def serve_loop(engine: ServingEngine, trace, tuner=None, *,
+               max_wall_s: float | None = None, idle_sleep_s: float = 0.001,
+               verbose: bool = False) -> dict:
+    """Replay an arrival trace through the engine, optionally self-tuning.
+
+    Mirrors repro.ps.trainer.SelfTuningLoop: per busy quantum the driver
+    records (context value = offered load, execution time) into the tuner
+    and executes any ReconfigPlan it emits, reporting the observed cost.
+    """
+    pending = deque(sorted(trace, key=lambda r: r.arrival_s))
+    n_req = len(pending)
+    tok0 = engine.total_tokens          # deltas: engines may be re-used
+    fin0 = len(engine.finished)
+    t_start = time.perf_counter()
+    reconfigs = []
+    reconfig_total_s = 0.0
+    timeline = []                 # (t, total_tokens, load) every ~50 quanta
+    busy_ticks = 0
+    while pending or engine.has_work():
+        now = time.perf_counter() - t_start
+        if max_wall_s is not None and now > max_wall_s:
+            break
+        while pending and pending[0].arrival_s <= now:
+            engine.submit(pending.popleft(), now=now)
+        tick = engine.step(now=now)
+        if tick["idle"]:
+            # nothing in flight and nothing arrived: wait for traffic
+            if pending:
+                time.sleep(min(idle_sleep_s,
+                               max(pending[0].arrival_s - now, 0.0)))
+            continue
+        busy_ticks += 1
+        if busy_ticks % 50 == 1:
+            timeline.append((round(now, 3), engine.total_tokens - tok0,
+                             tick["load"]))
+        if tuner is not None:
+            tuner.record_iteration(float(tick["load"]), tick["dt"])
+            plan = tuner.maybe_advance()
+            if plan is not None:
+                cost = engine.apply_plan(plan)
+                tuner.record_reconfig(plan, cost)
+                reconfig_total_s += cost
+                reconfigs.append({
+                    "t": round(time.perf_counter() - t_start, 3),
+                    "kinds": list(plan.kinds), "cost_s": round(cost, 4),
+                    "setting": dict(plan.new)})
+                if verbose:
+                    print(f"[reconfig@{reconfigs[-1]['t']:.1f}s] "
+                          f"{plan.kinds} -> {plan.new} ({cost:.2f}s)",
+                          flush=True)
+    wall = time.perf_counter() - t_start
+    done = engine.finished[fin0:]
+    tokens = engine.total_tokens - tok0
+    lats = [r.latency_s for r in done]
+    ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+    stats = {
+        "requests": n_req,
+        "completed": len(done),
+        "wall_s": wall,
+        "tokens": tokens,
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "p50_latency_s": float(np.percentile(lats, 50)) if lats else None,
+        "p99_latency_s": float(np.percentile(lats, 99)) if lats else None,
+        "p50_ttft_s": float(np.percentile(ttfts, 50)) if ttfts else None,
+        "reconfigs": reconfigs,
+        "reconfig_count": len(reconfigs),
+        "reconfig_total_s": reconfig_total_s,
+        "final_setting": dict(engine.setting),
+        "timeline": timeline,
+    }
+    return stats

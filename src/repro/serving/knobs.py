@@ -1,0 +1,51 @@
+"""Serving-time system-setting space (paper §III applied to inference).
+
+Every knob changes only efficiency, never which tokens are produced — with
+the one documented exception of ``quant``/``cache_dtype``, which trade KV
+precision for memory/bandwidth the way the paper's bfloat16_sendrecv knob
+trades push precision (the greedy argmax is empirically insensitive at the
+scales served here, and the engine's reference test pins the exact-output
+settings).
+
+Knob classes for reconfiguration planning (repro.core.reconfig):
+  * ``max_batch`` / ``cache_dtype`` re-layout the slot KV pool — model-data
+    relocation, Type I-b, executed ODMR-style (allocate new pool, relocate
+    live slots, no quiesce of the request queue);
+  * everything else only swaps the compiled step — Type II (SSR).
+"""
+from __future__ import annotations
+
+from repro.core.knobs import Knob, KnobSpace
+
+# Type I-b knobs: changing them relocates the KV pool (the serving engine's
+# "model data"). Passed to reconfig.classify/plan as mesh_knobs.
+SERVING_RELAYOUT_KNOBS = ("max_batch", "cache_dtype")
+
+
+def serving_knob_space(max_batch_ceiling: int = 8,
+                       include_batches: tuple = ()) -> KnobSpace:
+    # the ceiling (and any caller-supplied x0 value) is always a member, so
+    # every starting setting encodes into the space
+    batches = tuple(sorted({b for b in (1, 2, 4, 8, 16)
+                            if b <= max_batch_ceiling}
+                           | {max_batch_ceiling}
+                           | {b for b in include_batches
+                              if 1 <= b <= max_batch_ceiling}))
+    return KnobSpace((
+        Knob("max_batch", "ordinal", batches),
+        Knob("prefill_chunk", "ordinal", (16, 32)),
+        Knob("quant", "nominal", ("none", "int8")),
+        Knob("k_chunk", "ordinal", (128, 256)),
+        Knob("cache_dtype", "nominal", ("bf16", "f32")),
+    ))
+
+
+# Mirrors the pre-engine one-shot script: one request at a time, conservative
+# precision — the fixed baseline the benchmarks compare against.
+DEFAULT_SERVING_SETTING = {
+    "max_batch": 1,
+    "prefill_chunk": 16,
+    "quant": "none",
+    "k_chunk": 128,
+    "cache_dtype": "f32",
+}

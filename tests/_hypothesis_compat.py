@@ -1,0 +1,129 @@
+"""Offline fallback for the ``hypothesis`` property-testing API.
+
+The test-suite uses a small slice of hypothesis (``@given`` with
+``st.floats`` / ``st.integers`` / ``st.lists``, plus ``@settings``).  This
+shim reimplements exactly that slice with *fixed-seed* example sampling so
+the suite still collects and runs in environments where hypothesis is not
+installed.  No shrinking, no database — each test runs ``max_examples``
+deterministic samples (seeded by the test name) plus a handful of boundary
+examples, and reports the failing example in the assertion chain.
+"""
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def example(self, rng: random.Random, i: int):
+        raise NotImplementedError
+
+    def boundary_examples(self):
+        """A few deterministic edge samples drawn before the random ones."""
+        return []
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng, i):
+        return rng.uniform(self.lo, self.hi)
+
+    def boundary_examples(self):
+        return [self.lo, self.hi]
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng, i):
+        return rng.randint(self.lo, self.hi)
+
+    def boundary_examples(self):
+        return [self.lo, self.hi]
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng, i):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng, i) for _ in range(n)]
+
+    def boundary_examples(self):
+        out = []
+        for b in self.elements.boundary_examples():
+            out.append([b] * max(self.min_size, 1))
+        return out
+
+
+def floats(min_value, max_value, **_ignored):
+    return _Floats(min_value, max_value)
+
+
+def integers(min_value, max_value):
+    return _Integers(min_value, max_value)
+
+
+def lists(elements, min_size=0, max_size=None, **_ignored):
+    return _Lists(elements, min_size, max_size)
+
+
+strategies = types.SimpleNamespace(floats=floats, integers=integers,
+                                   lists=lists)
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_compat_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_compat_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}".encode())
+            rng = random.Random(seed)
+            # boundary pass: extremes of the *first* strategy, defaults for
+            # the rest — cheap edge coverage without a combinatorial blowup
+            cases = []
+            if arg_strats or kw_strats:
+                strats = list(arg_strats) + list(kw_strats.values())
+                for b in strats[0].boundary_examples():
+                    vals = [b] + [s.example(rng, -1) for s in strats[1:]]
+                    cases.append(vals)
+            for i in range(n):
+                cases.append([s.example(rng, i)
+                              for s in list(arg_strats) + list(kw_strats.values())])
+            for vals in cases:
+                args = vals[:len(arg_strats)]
+                kwargs = dict(zip(kw_strats, vals[len(arg_strats):]))
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (offline shim): args={args} "
+                        f"kwargs={kwargs}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._compat_given = True
+        if hasattr(fn, "_compat_max_examples"):
+            wrapper._compat_max_examples = fn._compat_max_examples
+        return wrapper
+    return deco

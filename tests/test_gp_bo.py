@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline: fixed-seed fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.bo import LossAwareBO, expected_improvement
 from repro.core.gp import GaussianProcess

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline: fixed-seed fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.registry import QWEN3_MOE_235B
 from repro.models.attention import chunked_attention, decode_attention

@@ -1,7 +1,10 @@
 """Unit + property tests for the online progress estimator (paper §IV)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline: fixed-seed fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.progress import (estimate_remaining_time, fit_progress)
 

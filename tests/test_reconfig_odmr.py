@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline: fixed-seed fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint import restore_pytree, save_pytree, latest_step
 from repro.core.reconfig import ReconfigCostModel, classify, plan
@@ -31,6 +34,39 @@ def test_cost_model_running_average():
     cm.observe(("I-b",), 2.0)
     assert cm.estimate(("I-b",)) == pytest.approx(3.0)
     assert cm.estimate(("I-b", "II")) == pytest.approx(4.0)  # 3.0 + default
+
+
+def test_classify_edge_cases():
+    # unchanged settings produce no reconfiguration kinds at all
+    assert classify({}, {}) == ()
+    assert classify({"remat": "full"}, {"remat": "full"}) == ()
+    # a knob absent from the old setting counts by its class
+    assert classify({}, {"mesh_split": "2x4"}) == ("I-b",)
+    # all three classes in one transition, sorted canonical order
+    old = {"mesh_split": "a", "data_shards": 1, "remat": "none"}
+    new = {"mesh_split": "b", "data_shards": 2, "remat": "full"}
+    assert classify(old, new) == ("I-a", "I-b", "II")
+    # custom knob classes: the serving engine's KV-pool knobs are Type I-b
+    assert classify({"max_batch": 1, "quant": "none"},
+                    {"max_batch": 8, "quant": "int8"},
+                    mesh_knobs=("max_batch", "cache_dtype")) == ("I-b", "II")
+    p = plan({"max_batch": 1}, {"max_batch": 8},
+             mesh_knobs=("max_batch", "cache_dtype"))
+    assert p.needs_relocation
+
+
+def test_cost_model_seeds_and_decay():
+    cm = ReconfigCostModel()
+    # per-kind seeds: a Type II swap (XLA recompile) is orders of magnitude
+    # above an ODMR Type I-b relocation before any observation lands
+    assert cm.estimate(("II",)) > 10 * cm.estimate(("I-b",))
+    cm.observe(("II",), 4.0)              # cold compile
+    for _ in range(6):
+        cm.observe(("II",), 0.05)         # warm executable-cache hits
+    # the decayed average tracks the warm cost; an all-time mean would
+    # still sit at ~0.6s and over-deter reconfiguration
+    assert cm.estimate(("II",)) < 0.2
+    assert cm.counts["II"] == 7
 
 
 def test_plan_method_selection():

@@ -1,0 +1,167 @@
+"""Serving-engine invariants: request accounting, slot reclamation,
+batched-output correctness vs the unbatched reference decode, online
+re-layout, and the bounded executable cache."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.lru import LRUCache
+from repro.core.reconfig import plan
+from repro.models import lm
+from repro.models.lm import ModelKnobs
+from repro.serving import (DEFAULT_SERVING_SETTING, SERVING_RELAYOUT_KNOBS,
+                           Request, ServingEngine, serve_loop)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _requests(cfg, lens, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (p,))
+                    .astype(np.int32),
+                    max_new=max_new, arrival_s=0.0)
+            for i, p in enumerate(lens)]
+
+
+def _setting(**kw):
+    return dict(DEFAULT_SERVING_SETTING, **kw)
+
+
+def _reference_generate(params, cfg, prompt, max_new, *, max_seq=48,
+                        prefill_chunk=16, k_chunk=128, cache_dtype="f32"):
+    """Unbatched greedy decode mirroring the engine's prefill padding, so
+    any engine mismatch is a slot/batching bug, not a numeric artifact."""
+    P = len(prompt)
+    bucket = -(-P // prefill_chunk) * prefill_chunk
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :P] = prompt
+    kn = ModelKnobs(k_chunk=k_chunk)
+    hidden, _, pcache = lm.forward(params, {"tokens": jnp.asarray(padded)},
+                                   cfg, None, kn, mode="prefill")
+    logits = lm.logits_fn(params, hidden[:, P - 1:P], cfg, None)
+    tok = int(jnp.argmax(logits[0, 0]))
+    out = [tok]
+    dt = jnp.float32 if cache_dtype == "f32" else jnp.bfloat16
+    cache = {k: jnp.zeros(s.shape, dt)
+             for k, s in lm.init_cache_shapes(cfg, 1, max_seq).items()}
+    for k in ("k", "v"):
+        cache[k] = cache[k].at[:, 0, :P].set(
+            pcache[k][:, 0, :P].astype(dt))
+    for i in range(max_new - 1):
+        pos = jnp.full((1,), P + i, jnp.int32)
+        logits, cache = lm.decode_step(
+            params, cache, jnp.asarray([[tok]], jnp.int32), pos, cfg)
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+    return out
+
+
+def test_no_drop_no_duplicate(model):
+    cfg, params = model
+    engine = ServingEngine(params, cfg, _setting(max_batch=4), max_seq=48)
+    reqs = _requests(cfg, [5, 12, 17, 3, 9, 21, 7, 14], max_new=5)
+    stats = serve_loop(engine, reqs)
+    assert stats["completed"] == len(reqs)
+    assert sorted(engine.submitted) == sorted(r.rid for r in reqs)
+    finished_ids = [r.rid for r in engine.finished]
+    assert sorted(finished_ids) == sorted(engine.submitted)
+    assert len(set(finished_ids)) == len(finished_ids)          # no dups
+    for r in engine.finished:
+        assert len(r.tokens_out) == r.max_new
+
+
+def test_slots_reclaimed(model):
+    cfg, params = model
+    engine = ServingEngine(params, cfg, _setting(max_batch=2), max_seq=48)
+    for r in _requests(cfg, [6, 6, 6, 6, 6], max_new=3):
+        engine.submit(r)
+    peak = 0
+    while engine.has_work():
+        engine.step()
+        assert engine.n_active <= 2                # admission respects knob
+        peak = max(peak, engine.n_active)
+    assert peak == 2                               # batching actually engaged
+    assert all(r is None for r in engine.slot_req)  # every slot reclaimed
+    assert len(engine.finished) == 5
+
+
+def test_engine_matches_unbatched_reference(model):
+    cfg, params = model
+    lens, max_new = [5, 12, 17], 6
+    engine = ServingEngine(params, cfg, _setting(max_batch=4), max_seq=48)
+    serve_loop(engine, _requests(cfg, lens, max_new=max_new))
+    by_rid = {r.rid: r for r in engine.finished}
+    for i, p in enumerate(lens):
+        ref = _reference_generate(params, cfg, by_rid[i].prompt, max_new)
+        assert by_rid[i].tokens_out == ref, f"request {i} diverged"
+
+
+def test_relayout_preserves_live_requests(model):
+    """Type I-b pool re-layout mid-flight: live slots relocate, outputs
+    stay identical to the never-reconfigured reference."""
+    cfg, params = model
+    lens, max_new = [5, 12], 8
+    engine = ServingEngine(params, cfg, _setting(max_batch=2), max_seq=48)
+    for r in _requests(cfg, lens, max_new=max_new):
+        engine.submit(r)
+    for _ in range(3):                     # both requests mid-generation
+        engine.step()
+    assert engine.n_active == 2
+    p = plan(engine.setting, _setting(max_batch=4),
+             mesh_knobs=SERVING_RELAYOUT_KNOBS)
+    assert "I-b" in p.kinds
+    engine.apply_plan(p)
+    assert engine.n_slots >= 4
+    while engine.has_work():
+        engine.step()
+    by_rid = {r.rid: r for r in engine.finished}
+    for i, pl in enumerate(lens):
+        ref = _reference_generate(params, cfg, by_rid[i].prompt, max_new)
+        assert by_rid[i].tokens_out == ref, f"request {i} diverged"
+
+
+def test_rejects_oversized_request(model):
+    cfg, params = model
+    engine = ServingEngine(params, cfg, _setting(), max_seq=32)
+    with pytest.raises(ValueError):
+        engine.submit(Request(rid=0,
+                              prompt=np.zeros(30, np.int32), max_new=8))
+
+
+def test_unsupported_family_raises():
+    cfg = get_config("falcon-mamba-7b").reduced()
+    with pytest.raises(NotImplementedError):
+        ServingEngine({}, cfg, _setting())
+
+
+def test_lru_cache_bounds_and_recency():
+    cache = LRUCache(capacity=3)
+    for i in range(5):
+        cache.put(i, str(i))
+    assert len(cache) == 3 and cache.evictions == 2
+    assert 0 not in cache and 1 not in cache
+    cache.get(2)                                    # refresh 2
+    cache.put(5, "5")                               # evicts 3, not 2
+    assert 2 in cache and 3 not in cache
+    made = []
+    cache.get_or_create("k", lambda: made.append(1) or "v")
+    cache.get_or_create("k", lambda: made.append(1) or "v")
+    assert made == [1]                              # factory ran once
+
+
+def test_engine_step_cache_bounded(model):
+    cfg, params = model
+    engine = ServingEngine(params, cfg, _setting(), max_seq=48,
+                           step_cache_size=2)
+    reqs = _requests(cfg, [5, 17, 33], max_new=2)   # 3 prefill buckets
+    serve_loop(engine, reqs)
+    assert len(engine._steps) <= 2
+    assert len(engine.finished) == 3                # eviction never corrupts

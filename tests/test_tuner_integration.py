@@ -5,7 +5,10 @@ import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # offline: fixed-seed fallback shim
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.knobs import Knob, KnobSpace, setting_key
 from repro.core.metrics import MetricsRepository, remove_outliers
