@@ -2,21 +2,27 @@
 
 Protocol: for each scenario the same arrival trace is replayed twice —
 once with the serving knobs frozen at the pre-engine default (one request
-at a time, f32 KV), once with the TuningManager + ServingObjective tuning
-the knobs online while serving.  The offered load is calibrated against the
-machine's measured single-slot service rate so the fixed default is
-genuinely overloaded (the regime the north-star cares about) on any host.
+at a time, f32 KV, no sharing), once with the TuningManager +
+ServingObjective tuning the knobs online while serving.  The offered load
+is calibrated against the machine's measured single-slot service rate so
+the fixed default is genuinely overloaded (the regime the north-star cares
+about) on any host.  The ``shared_prefix`` scenario adds a sharing
+ablation: the paged pool with prefix sharing on vs off at the same fixed
+setting, isolating the copy-on-write block reuse from the tuner.
 
-  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke]
+  PYTHONPATH=src python benchmarks/bench_serving.py [--smoke | --ci]
 
-Writes BENCH_serving.json (repo root) with per-scenario tokens/s, p50/p99
-latency, reconfiguration count, and the tokens-over-time trajectory.
+Writes artifacts/bench/BENCH_serving.json (per-scenario tokens/s, p50/p99
+latency, reconfiguration count, prefill-sharing counters, tokens-over-time
+trajectory).  ``--ci`` runs one tiny fixed-seed scenario and asserts the
+tuned engine completes and emits a well-formed report (the scripts/ci.sh
+bit-rot gate); it writes BENCH_serving_smoke.json so the canonical
+artifact only ever comes from full runs.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
@@ -24,11 +30,15 @@ import numpy as np
 
 from common import save_artifact
 
-REPO_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
-SCENARIO_NAMES = ("poisson", "bursty", "diurnal")
+SCENARIO_NAMES = ("poisson", "bursty", "diurnal", "shared_prefix",
+                  "long_prompt")
+REPORT_KEYS = ("requests", "completed", "tokens", "tokens_per_s",
+               "p50_latency_s", "p99_latency_s", "reconfig_count",
+               "final_setting", "prefill_tokens_computed",
+               "prefill_tokens_total")
 
 
-def make_warm_engine(params, cfg, max_seq, max_prompt=24):
+def make_warm_engine(params, cfg, max_seq, max_prompt):
     """One engine for every arm and scenario: all executables the knob space
     can reach are AOT-compiled up front (server startup warmup), so the
     fixed-vs-tuned comparison isolates the *policy*, not compile luck."""
@@ -36,7 +46,8 @@ def make_warm_engine(params, cfg, max_seq, max_prompt=24):
                                serving_knob_space)
     engine = ServingEngine(params, cfg, DEFAULT_SERVING_SETTING,
                            max_seq=max_seq)
-    engine.warm_start(serving_knob_space(), max_prompt=max_prompt)
+    engine.warm_start(serving_knob_space(family=cfg.family),
+                      max_prompt=max_prompt)
     return engine
 
 
@@ -66,18 +77,48 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
     out = {"rate_rps": rate, "duration_s": duration,
            "n_requests": len(trace())}
 
+    # every arm starts from the default setting AND a cold prefix cache —
+    # one arm's prefills must never serve another arm's admissions
     engine.reconfigure(DEFAULT_SERVING_SETTING)
+    engine.pool.reset_prefix_cache()
     out["fixed_default"] = serve_loop(engine, trace())
 
     engine.reconfigure(DEFAULT_SERVING_SETTING)
+    engine.pool.reset_prefix_cache()
     tuner = TuningManager(
-        serving_knob_space(), DEFAULT_SERVING_SETTING,
+        serving_knob_space(family=cfg.family), DEFAULT_SERVING_SETTING,
         TunerConfig(eps=1e-6, a=tuner_a, b=tuner_b, seed=seed,
-                    min_ei_seconds=0.5, ei_rel_threshold=0.1),
+                    min_ei_seconds=0.5, ei_rel_threshold=0.1,
+                    # heavy-tick traffic (long prompts) must not stretch
+                    # the init phase past the workload: cap windows by time.
+                    # Generous cap — windows that close with only a handful
+                    # of quanta give the GP hopelessly noisy Y and the
+                    # tuner thrashes
+                    window_time_s=2.0),
         objective=ServingObjective(engine, slo_p99_s=slo),
         reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS})
     out["self_tuned"] = serve_loop(engine, trace(), tuner)
     out["self_tuned"]["tuner_windows"] = len(tuner.history)
+    out["self_tuned"]["drift_events"] = len(tuner.drift_events)
+
+    if name == "shared_prefix":
+        # sharing ablation at one fixed batched setting: same paged pool,
+        # prefix sharing on vs off — the COW block reuse, isolated
+        base = dict(DEFAULT_SERVING_SETTING, max_batch=4)
+        abl = {}
+        for label, share in (("share_off", False), ("share_on", True)):
+            engine.reconfigure(dict(base, prefix_share=share))
+            engine.pool.reset_prefix_cache()
+            st = serve_loop(engine, trace())
+            abl[label] = {k: st[k] for k in REPORT_KEYS}
+            abl[label]["shared_blocks_hit"] = st["shared_blocks_hit"]
+            abl[label]["cow_copies"] = st["cow_copies"]
+            abl[label]["prefill_per_request"] = (
+                st["prefill_tokens_computed"] / max(st["completed"], 1))
+        abl["prefill_reduction"] = (
+            1.0 - abl["share_on"]["prefill_per_request"]
+            / max(abl["share_off"]["prefill_per_request"], 1e-9))
+        out["sharing_ablation"] = abl
 
     fx, tn = out["fixed_default"], out["self_tuned"]
     out["speedup"] = tn["tokens_per_s"] / max(fx["tokens_per_s"], 1e-9)
@@ -85,11 +126,26 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
     return out
 
 
+def check_report(results: dict, scenarios) -> None:
+    """Well-formedness gate (the --ci contract): every scenario has both
+    arms with the full metric set and a completed tuned run."""
+    for name in scenarios:
+        r = results["scenarios"][name]
+        for arm in ("fixed_default", "self_tuned"):
+            missing = [k for k in REPORT_KEYS if k not in r[arm]]
+            assert not missing, f"{name}/{arm} missing {missing}"
+        assert r["self_tuned"]["completed"] == r["self_tuned"]["requests"], \
+            f"{name}: tuned engine dropped requests"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="starcoder2-3b")
     ap.add_argument("--smoke", action="store_true",
-                    help="short traces / smaller tuner init (CI gate)")
+                    help="short traces / smaller tuner init")
+    ap.add_argument("--ci", action="store_true",
+                    help="fast gate: one tiny fixed-seed scenario, asserts "
+                         "a well-formed report; writes the _smoke artifact")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--overload", type=float, default=5.0,
                     help="offered load as a multiple of the fixed-default "
@@ -106,13 +162,18 @@ def main():
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    duration = args.duration or (2.5 if args.smoke else 6.0)
+    scenarios = ("poisson",) if args.ci else SCENARIO_NAMES
+    duration = args.duration or (1.5 if args.ci else
+                                 2.5 if args.smoke else 8.0)
     overload = args.overload
-    tuner_a, tuner_b = (30, 3) if args.smoke else (40, 4)
+    tuner_a, tuner_b = (20, 2) if args.ci else \
+        (30, 3) if args.smoke else (40, 3)
+    # long_prompt prompts reach 68 tokens; warm those buckets too
+    max_prompt = 24 if args.ci else 68
 
     print("warm-start: compiling the knob space's executables...", flush=True)
     t0 = time.perf_counter()
-    engine = make_warm_engine(params, cfg, args.max_seq)
+    engine = make_warm_engine(params, cfg, args.max_seq, max_prompt)
     print(f"warm-start done in {time.perf_counter() - t0:.1f}s "
           f"({len(engine._steps)} executables)", flush=True)
     base_tokps = calibrate_service_rate(engine, cfg)
@@ -121,10 +182,10 @@ def main():
     print(f"calibration: fixed-default {base_tokps:.1f} tok/s -> "
           f"rate {rate:.1f} req/s ({overload}x overload)", flush=True)
 
-    results = {"arch": cfg.name, "smoke": args.smoke,
+    results = {"arch": cfg.name, "smoke": args.smoke or args.ci,
                "calibrated_base_tokps": base_tokps, "scenarios": {}}
     t0 = time.perf_counter()
-    for name in SCENARIO_NAMES:
+    for name in scenarios:
         print(f"--- scenario {name}", flush=True)
         r = run_scenario(name, engine, cfg, rate, duration, args.seed,
                          tuner_a, tuner_b, slo=3.0)
@@ -135,19 +196,26 @@ def main():
               f"p99 {r['self_tuned']['p99_latency_s']:.2f}s  "
               f"({r['self_tuned']['reconfig_count']} reconfigs, "
               f"speedup {r['speedup']:.2f}x)", flush=True)
+        if "sharing_ablation" in r:
+            abl = r["sharing_ablation"]
+            print(f"    sharing {abl['share_on']['prefill_per_request']:.1f} "
+                  f"vs {abl['share_off']['prefill_per_request']:.1f} prefill "
+                  f"tok/req ({abl['prefill_reduction']:.0%} less, "
+                  f"{abl['share_on']['cow_copies']} COW)", flush=True)
 
     wins = sum(r["tuned_wins"] for r in results["scenarios"].values())
     results["tuned_wins"] = wins
     results["wall_s"] = time.perf_counter() - t0
-    print(f"self-tuned >= fixed-default on {wins}/{len(SCENARIO_NAMES)} "
+    print(f"self-tuned >= fixed-default on {wins}/{len(scenarios)} "
           f"scenarios ({results['wall_s']:.0f}s total)")
 
-    out_path = os.path.join(REPO_ROOT, "BENCH_serving.json")
-    with open(out_path, "w") as f:
-        json.dump(results, f, indent=1, default=str)
-    save_artifact("BENCH_serving.json", results)
-    print(f"wrote {os.path.normpath(out_path)}")
-    if wins < 2:
+    check_report(results, scenarios)
+    # the canonical artifact only ever comes from full runs
+    name = ("BENCH_serving_smoke.json" if (args.ci or args.smoke)
+            else "BENCH_serving.json")
+    save_artifact(name, results)
+    print(f"wrote artifacts/bench/{name}")
+    if not args.ci and wins < len(scenarios) - 1:
         raise SystemExit(1)
 
 

@@ -65,6 +65,25 @@ class LossAwareBO:
             self.records = self.records[-self.max_obs:]
         self.gp = None                        # refit lazily
 
+    def forget_setting(self, setting: dict):
+        """Drop every stored observation of ``setting`` (load-drift retune:
+        the incumbent's past Y values describe a workload that no longer
+        exists, and keeping them makes the GP forever confident the stale
+        optimum is good — MLtuner's re-search trigger).  Fresh windows under
+        the same setting re-observe it against the new workload."""
+        from repro.core.knobs import setting_key
+        key = setting_key(setting)
+        keep = [i for i, (s, _, _) in enumerate(self.records)
+                if setting_key(s) != key]
+        if len(keep) == len(self.records):
+            return 0
+        dropped = len(self.records) - len(keep)
+        self.X = [self.X[i] for i in keep]
+        self.y = [self.y[i] for i in keep]
+        self.records = [self.records[i] for i in keep]
+        self.gp = None
+        return dropped
+
     @staticmethod
     def _loss_feat(loss: float) -> float:
         return math.log(max(loss, 1e-9))
@@ -100,11 +119,20 @@ class LossAwareBO:
         Xc = np.asarray([self.space.encode(c) + [lf] for c in cands])
         mu, sigma = self.gp.predict(Xc)
 
-        # current best: GP posterior at the observed settings, at current loss
-        Xb = np.asarray([self.space.encode(s) + [lf]
-                         for s, _, _ in self.records])
-        mu_b, _ = self.gp.predict(Xb)
-        best = float(np.min(mu_b))
+        # EI baseline: what a *switch* improves on (paper §III-C compares
+        # EI against the reconfiguration cost of leaving the incumbent).
+        # Using the global best posterior here deadlocks a bad incumbent:
+        # the clearly-better observed setting shows EI ~ 0 ("no improvement
+        # over best") and the tuner freezes where it stands.
+        if current_setting is not None:
+            mu_c, _ = self.gp.predict(
+                np.asarray([self.space.encode(current_setting) + [lf]]))
+            best = float(mu_c[0])
+        else:
+            Xb = np.asarray([self.space.encode(s) + [lf]
+                             for s, _, _ in self.records])
+            mu_b, _ = self.gp.predict(Xb)
+            best = float(np.min(mu_b))
 
         ei_log = expected_improvement(mu, sigma, best)
         i = int(np.argmax(ei_log))

@@ -16,8 +16,9 @@ from typing import Any
 @dataclass(frozen=True)
 class Knob:
     name: str
-    kind: str                  # "ordinal" | "nominal" | "bool"
-    values: tuple              # discrete admissible values, in order
+    kind: str                  # "ordinal" | "nominal" | "bool" | "continuous"
+    values: tuple              # discrete admissible values, in order;
+                               # for "continuous": (lo, hi) float range
 
     def encode(self, v) -> list[float]:
         if self.kind == "nominal":
@@ -26,6 +27,9 @@ class Knob:
             return out
         if self.kind == "bool":
             return [1.0 if v else 0.0]
+        if self.kind == "continuous":
+            lo, hi = self.values
+            return [(float(v) - lo) / max(hi - lo, 1e-12)]
         idx = self.values.index(v)
         if len(self.values) == 1:
             return [0.0]
@@ -33,6 +37,12 @@ class Knob:
 
     def dim(self) -> int:
         return len(self.values) if self.kind == "nominal" else 1
+
+    def clip(self, v):
+        if self.kind != "continuous":
+            return v
+        lo, hi = self.values
+        return min(hi, max(lo, float(v)))
 
 
 @dataclass(frozen=True)
@@ -52,7 +62,14 @@ class KnobSpace:
         return sum(k.dim() for k in self.knobs)
 
     def sample(self, rng: _random.Random) -> dict:
-        return {k.name: rng.choice(k.values) for k in self.knobs}
+        out = {}
+        for k in self.knobs:
+            if k.kind == "continuous":
+                lo, hi = k.values
+                out[k.name] = rng.uniform(lo, hi)
+            else:
+                out[k.name] = rng.choice(k.values)
+        return out
 
     def stratified_samples(self, rng: _random.Random, n: int) -> list[dict]:
         """Latin-hypercube-style initialization pool: ``n`` settings that
@@ -62,6 +79,13 @@ class KnobSpace:
         when the tuning budget is a short serving window."""
         cols = []
         for k in self.knobs:
+            if k.kind == "continuous":
+                lo, hi = k.values
+                vals = ([lo + (hi - lo) * i / (n - 1) for i in range(n)]
+                        if n > 1 else [0.5 * (lo + hi)])
+                rng.shuffle(vals)
+                cols.append(vals)
+                continue
             m = len(k.values)
             if k.kind == "ordinal" and m > 1 and n > 1:
                 idx = [round(i * (m - 1) / (n - 1)) for i in range(n)]
@@ -78,7 +102,11 @@ class KnobSpace:
         for _ in range(n):
             s = dict(setting)
             k = rng.choice(self.knobs)
-            if k.kind == "ordinal" and len(k.values) > 1:
+            if k.kind == "continuous":
+                lo, hi = k.values
+                s[k.name] = k.clip(s[k.name] + rng.gauss(0.0,
+                                                         0.15 * (hi - lo)))
+            elif k.kind == "ordinal" and len(k.values) > 1:
                 idx = k.values.index(s[k.name])
                 step = rng.choice([-1, 1])
                 idx = min(len(k.values) - 1, max(0, idx + step))
@@ -88,7 +116,12 @@ class KnobSpace:
             out.append(s)
         return out
 
+    def has_continuous(self) -> bool:
+        return any(k.kind == "continuous" for k in self.knobs)
+
     def enumerate_all(self, limit: int = 4096):
+        if self.has_continuous():
+            return None                    # uncountable: sample instead
         vals = [k.values for k in self.knobs]
         total = 1
         for v in vals:
@@ -98,9 +131,11 @@ class KnobSpace:
         names = self.names()
         return [dict(zip(names, combo)) for combo in itertools.product(*vals)]
 
-    def size(self) -> int:
-        total = 1
+    def size(self) -> float:
+        total = 1.0
         for k in self.knobs:
+            if k.kind == "continuous":
+                return float("inf")
             total *= len(k.values)
         return total
 

@@ -38,6 +38,25 @@ class TunerConfig:
     min_ei_seconds: float = 0.0    # extra hysteresis on top of R_cost
     ei_rel_threshold: float = 0.05 # EI must also exceed this x best-remaining
     converge_window: int = 8       # rolling-mean window for the eps test
+    # a window closes after `a` iterations OR this much accumulated
+    # execution time, whichever first (None = iterations only).  The
+    # paper's a = 3 x workers assumes near-uniform iteration cost; serving
+    # quanta vary ~100x with prompt length, and a tick-count window under
+    # heavy ticks would stretch the init phase past the whole workload.
+    window_time_s: float | None = None
+    # load-drift detection (MLtuner-style re-search, arXiv 1803.07445):
+    # consecutive same-setting windows feed an EWMA/EWVar of the objective;
+    # a window whose Y degrades beyond drift_z sigmas marks the incumbent's
+    # past observations stale and the tuner re-explores.  Opt-in (0 = off):
+    # it targets objectives that track the workload directly (serving
+    # time-per-token); a training run's remaining-time estimate can spike
+    # on transient machine contention and must not forget its optimum.
+    drift_z: float = 0.0
+    drift_rel: float = 0.25        # Y must also exceed the EWMA by 25% —
+                                   # converged windows shrink the EWVar so a
+                                   # bare z-test would fire on ~1% noise
+    drift_alpha: float = 0.3       # EWMA weight of the newest window
+    drift_min_windows: int = 3     # observations before the z-test arms
 
 
 class TuningManager:
@@ -59,8 +78,14 @@ class TuningManager:
         self.bo = LossAwareBO(space, seed=cfg.seed)
         self.repo = MetricsRepository()
         self.costs = rc.ReconfigCostModel()
-        self.x0 = dict(x0)
-        self.current = dict(x0)
+        # project x0 onto the space: a driver may hand over a superset
+        # setting (e.g. the serving default carries paging knobs an ssm
+        # space doesn't tune), and extra keys would make a value-identical
+        # BO suggestion look like a switch — a phantom ~0s reconfiguration
+        # that poisons the per-kind cost averages
+        names = set(space.names())
+        self.x0 = {k: v for k, v in x0.items() if k in names}
+        self.current = dict(self.x0)
         # stratified (LHS-style) init: the b settings jointly cover every
         # knob's range, so the GP sees both extremes of each ordinal knob
         # before the online phase starts
@@ -73,6 +98,13 @@ class TuningManager:
         self.phase = "init"
         self.repo.begin_window(self.current, float("inf"))
         self.history: list[dict] = []
+        # drift tracker: EWMA/EWVar of Y over consecutive windows of the
+        # same (incumbent) setting
+        self._drift_key = None
+        self._drift_mean = 0.0
+        self._drift_var = 0.0
+        self._drift_n = 0
+        self.drift_events: list[dict] = []
 
     # ------------------------------------------------------------ metrics in
     def record_iteration(self, loss: float, time_s: float):
@@ -95,6 +127,10 @@ class TuningManager:
         its, losses, times = self.repo.clean_window(w)
         est = self.objective.window_score(its, losses, times)
         start_loss = losses[0]
+        # drift check BEFORE observing: on drift the incumbent's stale
+        # observations are dropped, then the fresh (degraded) Y is recorded
+        # as the first evidence of the new regime
+        self._check_drift(w.setting, est["Y"])
         self.bo.observe(w.setting, start_loss, est["Y"])
         self.history.append({
             "window": self._window_count, "setting": dict(w.setting),
@@ -104,11 +140,55 @@ class TuningManager:
             "phase": self.phase,
         })
 
+    def _window_time_up(self) -> bool:
+        if self.cfg.window_time_s is None:
+            return False
+        w = self.repo.windows_list[-1]
+        scale = self._a_scale if len(self._init_queue) == 0 else 1
+        return (len(w.iters) >= 2
+                and sum(w.times) >= self.cfg.window_time_s * scale)
+
+    # --------------------------------------------------------- drift detect
+    def _check_drift(self, setting: dict, Y: float):
+        """EWMA z-score test on the per-window objective of the incumbent.
+
+        Only consecutive windows of the *same* setting feed the tracker (a
+        switch resets it: a different setting is expected to score
+        differently).  When the newest window degrades beyond ``drift_z``
+        sigmas, the workload has shifted under the incumbent; its stored
+        observations are forgotten so EI re-explores instead of trusting the
+        stale optimum, and the adaptive window stretch is reset."""
+        if self.cfg.drift_z <= 0 or not np.isfinite(Y):
+            return
+        key = setting_key(setting)
+        if key != self._drift_key:
+            self._drift_key = key
+            self._drift_mean, self._drift_var, self._drift_n = Y, 0.0, 1
+            return
+        sd = np.sqrt(self._drift_var)
+        if (self._drift_n >= self.cfg.drift_min_windows and sd > 0
+                and (Y - self._drift_mean) / sd > self.cfg.drift_z
+                and Y > self._drift_mean * (1.0 + self.cfg.drift_rel)):
+            dropped = self.bo.forget_setting(setting)
+            self.drift_events.append({
+                "window": self._window_count, "setting": dict(setting),
+                "Y": Y, "ewma": self._drift_mean,
+                "z": float((Y - self._drift_mean) / sd),
+                "dropped_obs": dropped})
+            self._a_scale = 1
+            self._drift_mean, self._drift_var, self._drift_n = Y, 0.0, 1
+            return
+        a = self.cfg.drift_alpha
+        delta = Y - self._drift_mean
+        self._drift_mean += a * delta
+        self._drift_var = (1 - a) * (self._drift_var + a * delta * delta)
+        self._drift_n += 1
+
     # ------------------------------------------------------------- stepping
     def maybe_advance(self):
         """Call after each iteration. Returns a ReconfigPlan when the system
         should switch settings (the driver executes it and reports cost)."""
-        if self._iter < self._next_boundary:
+        if self._iter < self._next_boundary and not self._window_time_up():
             return None
         self._close_window()
         self._window_count += 1

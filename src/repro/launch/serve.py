@@ -9,9 +9,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-3b --reduced \
       --selftune
 
-Attention-family archs (dense/moe) run the continuous-batching engine;
-ssm/hybrid/vlm archs fall back to the legacy one-shot batched prefill+decode
-path until the engine grows state-pool support (ROADMAP open item).
+Every decode-capable family runs the engine: attention archs (dense / moe /
+vlm) through the paged KV pool (block tables + copy-on-write prefix
+sharing), ssm / hybrid archs through the recurrent state pool — one
+StatePool interface, no legacy fallback.  Encoder-only archs have no decode
+step and are rejected.
 """
 from __future__ import annotations
 
@@ -20,8 +22,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 
 def _engine_main(args, cfg, params):
@@ -35,16 +35,24 @@ def _engine_main(args, cfg, params):
     if args.prompt_len + args.gen > args.max_seq:
         raise SystemExit(f"--prompt-len + --gen ({args.prompt_len}+{args.gen})"
                          f" must fit in --max-seq ({args.max_seq})")
-    trace_kw = {}
+    trace_kw = {"prompt_lens": (4, args.prompt_len),
+                "max_news": (4, args.gen)}
     max_prompt = args.prompt_len
+    cap = args.max_seq - args.gen
     if args.scenario == "mixed_lengths":
         # the long mode has its own prompt-length range; cap it so every
-        # generated request fits the slot capacity
-        cap = args.max_seq - args.gen
+        # generated request fits the sequence capacity
         trace_kw["long_lens"] = (min(32, cap), min(56, cap))
         max_prompt = max(max_prompt, trace_kw["long_lens"][1])
+    elif args.scenario == "long_prompt":
+        trace_kw["prompt_lens"] = (min(40, cap - 1), min(68, cap))
+        max_prompt = max(max_prompt, trace_kw["prompt_lens"][1])
+    elif args.scenario == "shared_prefix":
+        trace_kw["prefix_len"] = min(32, max(cap - 8, 1))
+        max_prompt = max(max_prompt, trace_kw["prefix_len"] + 8)
     space = serving_knob_space(max_batch_ceiling=max(8, args.batch),
-                               include_batches=(args.batch,))
+                               include_batches=(args.batch,),
+                               family=cfg.family)
     setting = dict(DEFAULT_SERVING_SETTING, max_batch=args.batch)
     engine = ServingEngine(params, cfg, setting, max_seq=args.max_seq)
     if not args.cold:
@@ -55,20 +63,20 @@ def _engine_main(args, cfg, params):
         print(f"warm-start: {len(engine._steps)} executables in "
               f"{time.perf_counter() - t0:.1f}s", flush=True)
     trace = make_trace(args.scenario, args.rate, args.duration,
-                       vocab=cfg.vocab_size, seed=args.seed,
-                       prompt_lens=(4, args.prompt_len),
-                       max_news=(4, args.gen), **trace_kw)
+                       vocab=cfg.vocab_size, seed=args.seed, **trace_kw)
     tuner = None
     if args.selftune:
         tuner = TuningManager(
             space, setting,
             TunerConfig(eps=1e-6, a=args.window, b=args.init_settings,
-                        seed=args.seed),
+                        seed=args.seed, drift_z=args.drift_z,
+                        window_time_s=2.0),
             objective=ServingObjective(engine, slo_p99_s=args.slo),
             reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS})
 
     mode = "selftune" if args.selftune else f"fixed(max_batch={args.batch})"
-    print(f"arch={cfg.name} scenario={args.scenario} rate={args.rate}rps "
+    print(f"arch={cfg.name} family={cfg.family} pool={engine.pool.kind} "
+          f"scenario={args.scenario} rate={args.rate}rps "
           f"duration={args.duration}s mode={mode}")
     stats = serve_loop(engine, trace, tuner, verbose=True)
     print(f"served {stats['completed']}/{stats['requests']} requests, "
@@ -78,6 +86,12 @@ def _engine_main(args, cfg, params):
         print(f"latency p50={stats['p50_latency_s']:.2f}s "
               f"p99={stats['p99_latency_s']:.2f}s "
               f"ttft p50={stats['p50_ttft_s']:.2f}s")
+    if stats["prefill_tokens_total"]:
+        saved = (stats["prefill_tokens_total"]
+                 - stats["prefill_tokens_computed"])
+        print(f"prefill: {stats['prefill_tokens_computed']}/"
+              f"{stats['prefill_tokens_total']} tokens computed "
+              f"({saved} shared, {stats['cow_copies']} COW copies)")
     if args.selftune:
         print(f"reconfigurations: {stats['reconfig_count']} "
               f"({stats['reconfig_total_s']:.2f}s total), "
@@ -88,65 +102,12 @@ def _engine_main(args, cfg, params):
     print("OK", flush=True)
 
 
-def _legacy_main(args, cfg, params):
-    """One-shot batched prefill + decode (pre-engine path) — still the only
-    decode driver for ssm/hybrid/vlm families."""
-    from repro.models import lm
-
-    B, P, G = args.batch, args.prompt_len, args.gen
-    total = P + G
-    rng = np.random.default_rng(args.seed)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
-    batch = {"tokens": prompt}
-    if cfg.frontend == "patch":
-        batch = {"tokens": prompt[:, cfg.frontend_len:],
-                 "frontend": jnp.asarray(
-                     rng.standard_normal((B, cfg.frontend_len,
-                                          cfg.frontend_dim)), jnp.bfloat16)}
-
-    # prefill writes its cache at length P; decode continues into a cache of
-    # length `total`, so copy prefill state into the full-size cache.
-    prefill = jax.jit(lambda p, b: lm.prefill(p, b, cfg))
-    t0 = time.perf_counter()
-    logits, pcache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    cache = lm.init_cache(cfg, B, total)
-    for k in cache:
-        if k in ("k", "v", "shared_k", "shared_v"):
-            cache[k] = cache[k].at[:, :, :P].set(pcache[k].astype(cache[k].dtype))
-        else:
-            cache[k] = pcache[k].astype(cache[k].dtype)
-
-    decode = jax.jit(lambda p, c, t, q: lm.decode_step(p, c, t, q, cfg))
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    generated = [tok]
-    t0 = time.perf_counter()
-    for i in range(G):
-        pos = jnp.full((B,), P + i, jnp.int32)
-        logits, cache = decode(params, cache, tok, pos)
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} gen={G} (legacy one-shot)")
-    print(f"prefill: {t_prefill*1000:.1f} ms "
-          f"({B*P/t_prefill:.0f} tok/s)")
-    print(f"decode:  {t_decode*1000:.1f} ms total, "
-          f"{B*G/t_decode:.0f} tok/s, {t_decode/G*1000:.1f} ms/step")
-    print(f"sample continuation (req 0): {out[0, :16].tolist()}")
-    print("OK", flush=True)
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4,
-                    help="fixed max_batch (engine) / batch size (legacy)")
+                    help="fixed max_batch ceiling")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
@@ -154,7 +115,8 @@ def main():
     ap.add_argument("--selftune", action="store_true",
                     help="tune serving knobs online while serving")
     ap.add_argument("--scenario", default="poisson",
-                    choices=("poisson", "bursty", "diurnal", "mixed_lengths"),
+                    choices=("poisson", "bursty", "diurnal", "mixed_lengths",
+                             "shared_prefix", "long_prompt"),
                     help="traffic shape")
     ap.add_argument("--rate", type=float, default=40.0,
                     help="mean request arrival rate (req/s)")
@@ -167,8 +129,9 @@ def main():
                     help="random settings in the tuner init phase (b)")
     ap.add_argument("--slo", type=float, default=3.0,
                     help="p99 latency SLO (s) for the serving objective")
-    ap.add_argument("--legacy", action="store_true",
-                    help="force the pre-engine one-shot path")
+    ap.add_argument("--drift-z", type=float, default=3.0,
+                    help="load-drift z-score threshold (0 disables the "
+                         "EWMA re-search trigger)")
     ap.add_argument("--cold", action="store_true",
                     help="skip the startup executable warm-up (reconfig "
                          "costs then include cold XLA compiles)")
@@ -177,7 +140,6 @@ def main():
 
     from repro.configs.registry import get_config
     from repro.models import lm
-    from repro.serving.engine import ServingEngine
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -186,16 +148,7 @@ def main():
         raise SystemExit("encoder-only arch has no decode step")
 
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
-    use_engine = (not args.legacy
-                  and cfg.family in ServingEngine.SUPPORTED_FAMILIES)
-    if args.selftune and not use_engine:
-        raise SystemExit(f"--selftune needs the engine (families "
-                         f"{ServingEngine.SUPPORTED_FAMILIES}); "
-                         f"{cfg.name} is family={cfg.family}")
-    if use_engine:
-        _engine_main(args, cfg, params)
-    else:
-        _legacy_main(args, cfg, params)
+    _engine_main(args, cfg, params)
 
 
 if __name__ == "__main__":

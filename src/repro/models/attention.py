@@ -88,22 +88,25 @@ def chunked_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
 
 
 def decode_attention(q, k_cache, v_cache, *, pos):
-    """Single-token attention over a KV cache.
+    """Attention of S query tokens over a KV cache.
 
-    q: (B, 1, H, hd); caches: (B, Smax, K, hd); pos: (B,) index of the
-    newly-written token. The cache seq dim may be sharded (model axis);
-    the softmax reductions then lower to partial-reduce + all-reduce.
+    q: (B, S, H, hd); caches: (B, Smax, K, hd); pos: (B,) logical position
+    of the *first* query token (query j sits at pos + j, so S=1 is the
+    classic single-token decode and S>1 is chunked prefill against a prior
+    cache).  The cache seq dim may be sharded (model axis); the softmax
+    reductions then lower to partial-reduce + all-reduce.
     """
-    B, _, H, hd = q.shape
+    B, S, H, hd = q.shape
     scale = hd ** -0.5
     kh = _repeat_kv(k_cache, H)
     vh = _repeat_kv(v_cache, H)
     s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.bfloat16), kh,
                    preferred_element_type=jnp.float32) * scale
     kv_pos = jnp.arange(k_cache.shape[1])
-    mask = kv_pos[None, :] <= pos[:, None]                  # (B, Smax)
-    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    q_pos = pos[:, None] + jnp.arange(S)[None, :]           # (B, S)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]       # (B, S, Smax)
+    s = jnp.where(mask[:, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqs,bshd->bhqd", p.astype(vh.dtype), vh,
                      preferred_element_type=jnp.float32)
-    return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B,1,H,hd)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B,S,H,hd)

@@ -161,9 +161,17 @@ def init_params(cfg: ModelConfig, key):
 # ===========================================================================
 
 def _attn_apply(x, p, cfg: ModelConfig, ms, knobs: ModelKnobs, positions,
-                cache=None, pos=None):
+                cache=None, pos=None, block_tables=None):
     """Returns (out, new_kv): new_kv = (k, v) activations for train/prefill or
-    the updated cache pair for decode."""
+    the updated cache pair for decode.
+
+    Decode caches come in two layouts:
+      * dense (B, Smax, K, hd): position p of request b is row (b, p);
+      * paged (NB, bs, K, hd) + ``block_tables`` (B, MB): position p of
+        request b lives at physical (block_tables[b, p // bs], p % bs) —
+        the KV-pool indirection of the serving engine's PagedKVPool.
+    Both accept S >= 1 new tokens (S > 1 = chunked prefill against a prior
+    cache, e.g. a shared prompt prefix)."""
     B, S, D = x.shape
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     cdt = x.dtype
@@ -198,11 +206,25 @@ def _attn_apply(x, p, cfg: ModelConfig, ms, knobs: ModelKnobs, positions,
                                 q_positions=positions, kv_positions=positions,
                                 q_chunk=knobs.q_chunk, k_chunk=knobs.k_chunk)
         new_kv = (k, v)
-    else:                                   # decode: cache (B, Smax, K, hd)
+    elif block_tables is not None:          # decode: paged (NB, bs, K, hd)
         k_cache, v_cache = cache
-        b_idx = jnp.arange(B)
-        k_cache = k_cache.at[b_idx, pos].set(k[:, 0].astype(k_cache.dtype))
-        v_cache = v_cache.at[b_idx, pos].set(v[:, 0].astype(v_cache.dtype))
+        bs = k_cache.shape[1]
+        MB = block_tables.shape[1]
+        blk = jnp.take_along_axis(block_tables,
+                                  jnp.minimum(positions // bs, MB - 1), axis=1)
+        off = positions % bs                                # (B, S)
+        k_cache = k_cache.at[blk, off].set(k.astype(k_cache.dtype))
+        v_cache = v_cache.at[blk, off].set(v.astype(v_cache.dtype))
+        kg = k_cache[block_tables].reshape(B, MB * bs, K, hd)
+        vg = v_cache[block_tables].reshape(B, MB * bs, K, hd)
+        out = decode_attention(q, kg, vg, pos=pos)
+        new_kv = (k_cache, v_cache)
+    else:                                   # decode: dense (B, Smax, K, hd)
+        k_cache, v_cache = cache
+        b_idx = jnp.arange(B)[:, None]
+        s_idx = jnp.minimum(positions, k_cache.shape[1] - 1)
+        k_cache = k_cache.at[b_idx, s_idx].set(k.astype(k_cache.dtype))
+        v_cache = v_cache.at[b_idx, s_idx].set(v.astype(v_cache.dtype))
         out = decode_attention(q, k_cache, v_cache, pos=pos)
         new_kv = (k_cache, v_cache)
     out = jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd),
@@ -258,12 +280,18 @@ def _maybe_remat(fn, knobs: ModelKnobs):
 
 def forward(params, batch, cfg: ModelConfig, ms: MeshSpec | None = None,
             knobs: ModelKnobs = ModelKnobs(), mode: str = "train",
-            cache=None, pos=None):
-    """Returns (hidden (B,S,D), aux_loss, new_cache or None)."""
+            cache=None, pos=None, valid_len=None):
+    """Returns (hidden (B,S,D), aux_loss, new_cache or None).
+
+    ``valid_len`` (scalar, prefill only): number of non-pad tokens in a
+    right-padded batch.  Attention families ignore it (the causal mask plus
+    caller-side slicing already isolate pads); SSM families need it so the
+    returned recurrent state is the state *after token valid_len*, not after
+    the pads."""
     x = _embed(params, cfg, batch, ms)
     B, S, D = x.shape
     if mode == "decode":
-        positions = pos[:, None]                            # (B, 1)
+        positions = pos[:, None] + jnp.arange(S)[None, :]   # (B, S)
     else:
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
 
@@ -271,11 +299,12 @@ def forward(params, batch, cfg: ModelConfig, ms: MeshSpec | None = None,
         return _forward_attn(params, x, positions, cfg, ms, knobs, mode,
                              cache, pos)
     return _forward_ssm(params, x, positions, cfg, ms, knobs, mode,
-                        cache, pos)
+                        cache, pos, valid_len)
 
 
 def _forward_attn(params, x, positions, cfg, ms, knobs, mode, cache, pos):
     B, S, D = x.shape
+    bt = cache.get("block_tables") if cache is not None else None
 
     def body(x, inp):
         lp = inp["lp"]
@@ -283,7 +312,7 @@ def _forward_attn(params, x, positions, cfg, ms, knobs, mode, cache, pos):
         c = inp.get("kv")
         h, new_kv = _attn_apply(
             common.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps),
-            lp["attn"], cfg, ms, knobs, positions, c, pos)
+            lp["attn"], cfg, ms, knobs, positions, c, pos, block_tables=bt)
         x = x + h
         xn = common.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
         if cfg.uses_moe:
@@ -310,17 +339,22 @@ def _forward_attn(params, x, positions, cfg, ms, knobs, mode, cache, pos):
     else:
         x, (kvs, auxs) = jax.lax.scan(body, x, xs, unroll=knobs.scan_unroll)
     new_cache = None if mode == "train" else {"k": kvs[0], "v": kvs[1]}
+    if new_cache is not None and bt is not None:
+        new_cache["block_tables"] = bt
     x = common.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     return x, auxs.mean(), new_cache
 
 
-def _forward_ssm(params, x, positions, cfg, ms, knobs, mode, cache, pos):
+def _forward_ssm(params, x, positions, cfg, ms, knobs, mode, cache, pos,
+                 valid_len=None):
     B, S, D = x.shape
     mamba = mamba1_block if cfg.ssm_version == 1 else mamba2_block
     every = cfg.shared_attn_every
     is_hybrid = cfg.family == "hybrid"
     shared_p = params.get("shared")
     want_state = mode != "train"
+    if mode != "prefill":
+        valid_len = None                   # pads only exist in prefill
 
     def body(carry, inp):
         x, shared_kv = carry
@@ -328,7 +362,8 @@ def _forward_ssm(params, x, positions, cfg, ms, knobs, mode, cache, pos):
         st = inp.get("st")
         h, new_st = mamba(
             common.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps),
-            lp["ssm"], cfg, ms, st, chunk=knobs.ssm_chunk)
+            lp["ssm"], cfg, ms, st, chunk=knobs.ssm_chunk,
+            valid_len=valid_len)
         x = x + h
         if is_hybrid and shared_p is not None:
             a_idx = idx // every
@@ -475,16 +510,31 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
                                   init_cache_shapes(cfg, batch, max_seq))
 
 
+def init_paged_cache_shapes(cfg: ModelConfig, n_blocks: int, block_size: int):
+    """ShapeDtypeStruct pytree for a paged decode cache: fixed-size KV blocks
+    addressed through per-request block tables (``block_tables`` supplied at
+    decode time by the pool).  Attention families only — recurrent state has
+    no sequence axis to page."""
+    assert cfg.family in ("dense", "moe", "vlm", "encoder"), cfg.family
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    sds = jax.ShapeDtypeStruct((L, n_blocks, block_size, K, hd), jnp.bfloat16)
+    return {"k": sds, "v": sds}
+
+
 def prefill(params, batch, cfg: ModelConfig, ms=None,
-            knobs: ModelKnobs = ModelKnobs()):
-    hidden, _, cache = forward(params, batch, cfg, ms, knobs, mode="prefill")
+            knobs: ModelKnobs = ModelKnobs(), valid_len=None):
+    hidden, _, cache = forward(params, batch, cfg, ms, knobs, mode="prefill",
+                               valid_len=valid_len)
     logits = logits_fn(params, hidden[:, -1:], cfg, ms)
     return logits, cache
 
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig, ms=None,
                 knobs: ModelKnobs = ModelKnobs()):
-    """tokens: (B, 1); pos: (B,) write position. Returns (logits, cache)."""
+    """tokens: (B, S); pos: (B,) write position of the first token (S > 1 =
+    chunked prefill against the cache).  ``cache`` is dense (per-request
+    rows) or paged (block pool + ``block_tables``).  Returns (logits, cache).
+    """
     hidden, _, new_cache = forward(params, {"tokens": tokens}, cfg, ms, knobs,
                                    mode="decode", cache=cache, pos=pos)
     logits = logits_fn(params, hidden, cfg, ms)

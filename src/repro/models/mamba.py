@@ -36,28 +36,34 @@ def _scan_seq(step, h0, seq, chunk: int, S: int):
     return jax.lax.scan(step, h0, seq)
 
 
-def _causal_conv1d(x, w, b, state=None):
+def _causal_conv1d(x, w, b, state=None, valid_len=None):
     """Depthwise causal conv. x: (B, S, Di); w: (Di, K); b: (Di,).
 
-    With ``state`` (B, Di, K-1) given, x has S=1 and the state is shifted.
+    ``state`` (B, Di, K-1) is the trailing input window of the already-
+    processed prefix (zeros == no prefix), so the same code serves train /
+    prefill (state=None), single-token decode (S=1 + state), and chunked
+    decode (S>1 + state).  ``valid_len`` (scalar, right-padded prefill):
+    the returned state is the window ending at token ``valid_len`` rather
+    than at S, so pad tokens never leak into the recurrent state.
     """
     B, S, Di = x.shape
     K = w.shape[1]
     if state is not None:
-        window = jnp.concatenate([state.astype(x.dtype).transpose(0, 2, 1), x],
-                                 axis=1)                     # (B, K, Di)
-        y = jnp.einsum("bkd,dk->bd", window, w) + b
-        new_state = window[:, 1:, :].transpose(0, 2, 1)
-        return y[:, None, :], new_state
-    pad = jnp.zeros((B, K - 1, Di), x.dtype)
-    xp = jnp.concatenate([pad, x], axis=1)
+        past = state.astype(x.dtype).transpose(0, 2, 1)      # (B, K-1, Di)
+    else:
+        past = jnp.zeros((B, K - 1, Di), x.dtype)
+    xp = jnp.concatenate([past, x], axis=1)                  # (B, S+K-1, Di)
     # unfold K taps: sum_k x[t-K+1+k] * w[:, k]
     y = sum(xp[:, k:k + S, :] * w[:, k][None, None, :] for k in range(K))
-    new_state = xp[:, S:, :].transpose(0, 2, 1)              # last K-1 inputs
-    return y + b, new_state
+    if valid_len is None:
+        window = xp[:, S:, :]                                # last K-1 inputs
+    else:
+        window = jax.lax.dynamic_slice_in_dim(xp, valid_len, K - 1, axis=1)
+    return y + b, window.transpose(0, 2, 1)
 
 
-def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
+def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0,
+                 valid_len=None):
     """Falcon-mamba style block. x: (B, S, D)."""
     B, S, D = x.shape
     Di, N, R = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
@@ -65,7 +71,8 @@ def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])          # (B,S,2Di)
     xs, z = jnp.split(xz, 2, axis=-1)
     conv_state = state["conv"] if state is not None else None
-    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state,
+                                  valid_len)
     xs = jax.nn.silu(xs)
     xs = constrain(xs, ms, "D", None, "M")
 
@@ -74,6 +81,10 @@ def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
     dt = jax.nn.softplus(
         jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_w"]) + p["dt_b"]
     ).astype(jnp.float32)                                    # (B,S,Di)
+    if valid_len is not None:
+        # zeroed dt makes a step a no-op (dA = exp(0) = 1, update = 0), so
+        # right-pad tokens pass the recurrent state through unchanged
+        dt = dt * (jnp.arange(S) < valid_len)[None, :, None]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (Di,N)
     Bm = Bm.astype(jnp.float32)
     Cm = Cm.astype(jnp.float32)
@@ -104,7 +115,8 @@ def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
     return out, {"conv": new_conv, "h": new_h}
 
 
-def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
+def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0,
+                 valid_len=None):
     """Zamba2-style SSD block (single B/C group, scalar A per head)."""
     B, S, D = x.shape
     Di, N = cfg.d_inner, cfg.ssm_state
@@ -113,7 +125,8 @@ def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     xs, z = jnp.split(xz, 2, axis=-1)
     conv_state = state["conv"] if state is not None else None
-    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs, new_conv = _causal_conv1d(xs, p["conv_w"], p["conv_b"], conv_state,
+                                  valid_len)
     xs = jax.nn.silu(xs)
     xs = constrain(xs, ms, "D", None, "M")
 
@@ -122,6 +135,9 @@ def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0):
     dt = jax.nn.softplus(
         jnp.einsum("bsd,dh->bsh", x, p["dt_proj2"]) + p["dt_bias2"]
     ).astype(jnp.float32)                                    # (B,S,nh)
+    if valid_len is not None:
+        # as in mamba1: dt = 0 at pad positions => identity state transition
+        dt = dt * (jnp.arange(S) < valid_len)[None, :, None]
     A = -jnp.exp(p["A_log2"].astype(jnp.float32))            # (nh,)
     xh = xs.reshape(B, S, nh, P_).astype(jnp.float32)
 

@@ -55,6 +55,30 @@ def relocate_now(state, new_specs, new_ms: MeshSpec):
         state, new_specs, is_leaf=lambda x: not isinstance(x, dict))
 
 
+def relocate_rows(old_tree, new_tree, src, dst, axis: int = 1):
+    """Row-granular Type I-b relocation into a freshly allocated pool.
+
+    The ODMR idea applied one level down: instead of relocating whole
+    parameters (or, in serving, whole max-seq KV slabs), move only the rows
+    that are live — ``src[i]`` in every leaf of ``old_tree`` lands at
+    ``dst[i]`` in the matching leaf of ``new_tree`` (dtype-cast to the new
+    pool).  The serving engine uses it for both state-pool layouts: rows are
+    *slots* for the SSM/hybrid pool and *blocks* for the paged KV pool, so a
+    re-layout touches O(live data), never the whole allocation.
+    """
+    import jax.numpy as jnp
+    if len(src) == 0:
+        return new_tree
+    src = jnp.asarray(src)
+    dst = jnp.asarray(dst)
+
+    def move(o, n):
+        idx = (slice(None),) * axis + (dst,)
+        return n.at[idx].set(jnp.take(o, src, axis=axis).astype(n.dtype))
+
+    return jax.tree_util.tree_map(move, old_tree, new_tree)
+
+
 def timed_blocking(fn, *args):
     t0 = time.perf_counter()
     out = fn(*args)

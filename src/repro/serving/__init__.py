@@ -3,15 +3,22 @@
 The inference-side counterpart of the paper's self-tuning training loop.
 While the engine serves traffic, the same loss-aware BO machinery
 (repro.core.tuner with a ServingObjective) learns which serving setting —
-batch ceiling, prefill chunking, KV quantization/layout — is more efficient
-for the *current* load and applies it online: executable swaps (Type II)
-and KV-pool re-layouts (Type I-b).
+batch ceiling, paging geometry, prefill chunking, KV quantization/layout,
+admission budget — is more efficient for the *current* load and applies it
+online: executable swaps (Type II) and block-granular state-pool re-layouts
+(Type I-b).  Decode state lives behind the pluggable StatePool interface
+(repro.serving.pool): paged KV blocks with copy-on-write prefix sharing for
+attention families, per-slot recurrent state for ssm/hybrid — every family
+is served by the same engine.
 """
 from repro.serving.engine import Request, ServingEngine, serve_loop
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
                                  SERVING_RELAYOUT_KNOBS, serving_knob_space)
 from repro.serving.objective import ServingObjective
+from repro.serving.pool import (PagedKVPool, SSMStatePool, StatePool,
+                                make_state_pool)
 
 __all__ = ["Request", "ServingEngine", "serve_loop", "serving_knob_space",
            "DEFAULT_SERVING_SETTING", "SERVING_RELAYOUT_KNOBS",
-           "ServingObjective"]
+           "ServingObjective", "StatePool", "PagedKVPool", "SSMStatePool",
+           "make_state_pool"]

@@ -2,22 +2,26 @@
 
 Architecture (the serving half of the paper's Fig. 3):
 
-  * a FIFO request queue with an admission policy: at most ``max_batch``
-    requests are in flight; when decodes are running, at most one prefill is
-    admitted per scheduling quantum (bounded decode stall);
-  * a slot-based KV-cache pool: a single stacked cache of ``n_slots``
-    sequences (repro.models.lm cache layout).  A request owns one slot from
-    admission to completion; freed slots are recycled without touching the
-    other slots' state (continuous batching, no generation barrier);
+  * a FIFO request queue with a block-aware admission policy: at most
+    ``max_batch`` requests are in flight; while decodes are running, the
+    continuous ``admit_budget`` knob meters prefills per scheduling quantum
+    (fractional budgets accumulate across quanta); a request is admitted
+    only when its *blocks* fit, and a short bounded lookahead lets small
+    requests pass a long prompt stuck at the head of the queue;
+  * a pluggable ``StatePool`` (repro.serving.pool) holding decode state for
+    every model family: paged KV blocks + per-request block tables with
+    copy-on-write prompt-prefix sharing for attention families, per-slot
+    recurrent state for ssm/hybrid — one engine, no family fallback;
   * interleaved prefill/decode: prefill runs per request at batch 1, padded
     to a multiple of ``prefill_chunk`` (bounds the number of prefill
-    executables), and writes its KV into the slot; decode advances *all*
-    live slots one token per quantum;
+    executables); a prompt whose prefix is already cached only computes its
+    suffix (chunked prefill against the shared blocks); decode advances
+    *all* live slots one token per quantum through the pool's indirection;
   * online reconfiguration: Type II = swap the AOT-compiled decode/prefill
     executables (bounded LRU, shared policy with the training loop); Type
-    I-b = ODMR-style KV-pool re-layout — allocate the pool for the new
-    ``max_batch``/``cache_dtype``, relocate live slots, never quiesce the
-    queue.
+    I-b = ODMR-style pool re-layout — allocate the pool for the new
+    ``max_batch``/``block_size``/``cache_dtype``, relocate only the *live*
+    blocks/slots, never quiesce the queue.
 
 The engine is knob-driven but tuner-agnostic: ``serve_loop`` wires it to a
 TuningManager exactly the way repro.ps.trainer wires the training job.
@@ -40,6 +44,7 @@ from repro.models import lm
 from repro.models.lm import ModelKnobs
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
                                  SERVING_RELAYOUT_KNOBS)
+from repro.serving.pool import make_state_pool, pool_dtype
 
 
 @dataclass
@@ -64,46 +69,54 @@ class Request:
                 else self.first_token_s - self.arrival_s)
 
 
-def _cache_dtype(setting: dict):
-    return jnp.float32 if setting.get("cache_dtype") == "f32" else jnp.bfloat16
-
-
 class ServingEngine:
-    SUPPORTED_FAMILIES = ("dense", "moe")
+    SUPPORTED_FAMILIES = ("dense", "moe", "vlm", "ssm", "hybrid")
+    ADMIT_LOOKAHEAD = 4           # queue positions scanned past a head
+                                  # request whose blocks don't fit yet
 
     def __init__(self, params, cfg, setting: dict | None = None, *,
-                 max_seq: int = 96, ms=None, step_cache_size: int = 24):
+                 max_seq: int = 96, ms=None, step_cache_size: int = 24,
+                 block_overcommit: float = 1.0):
         if cfg.family not in self.SUPPORTED_FAMILIES:
             raise NotImplementedError(
-                f"serving engine supports {self.SUPPORTED_FAMILIES} for now; "
-                f"got family={cfg.family!r} (ssm/hybrid state pools are a "
-                f"ROADMAP open item)")
+                f"serving engine supports {self.SUPPORTED_FAMILIES}; "
+                f"got family={cfg.family!r} (encoder-only models have no "
+                f"decode step)")
         self.params = params
         self.cfg = cfg
         self.ms = ms
         self.max_seq = max_seq
-        self.setting = dict(setting or DEFAULT_SERVING_SETTING)
-        # compiled executables: decode per (n_slots, dtype), prefill per
-        # (bucket, k_chunk, dtype) — same bounded-LRU policy as the trainer
+        self.block_overcommit = block_overcommit
+        self.setting = dict(DEFAULT_SERVING_SETTING)
+        self.setting.update(setting or {})
+        # compiled executables, bounded-LRU (same policy as the trainer):
+        # decode per pool layout, prefill per (bucket, k_chunk), chunked
+        # shared-prefix prefill per (bucket, cache_dtype)
         self._steps = LRUCache(step_cache_size)
         self.queue: deque[Request] = deque()
-        self._alloc_pool(self.setting["max_batch"])
+        self.pool = make_state_pool(cfg, self.setting, max_seq, ms,
+                                    overcommit=block_overcommit)
+        self._reset_slots()
         self.clock = 0.0              # driver-supplied wall time
+        self._admit_acc = 0.0         # fractional admit_budget carry
         # accounting (invariants are tested against these)
         self.submitted: list[int] = []
         self.finished: list[Request] = []
         self.total_tokens = 0
         self.ticks = 0
+        self.prefill_tokens_computed = 0   # tokens actually prefilled
+        self.prefill_tokens_total = 0      # tokens the prompts contained
 
-    # ----------------------------------------------------------- pool mgmt
-    def _alloc_pool(self, n_slots: int):
-        dt = _cache_dtype(self.setting)
-        shapes = lm.init_cache_shapes(self.cfg, n_slots, self.max_seq)
-        self.pool = {k: jnp.zeros(s.shape, dt) for k, s in shapes.items()}
-        self.n_slots = n_slots
-        self.slot_req: list[Request | None] = [None] * n_slots
-        self.slot_pos = np.zeros(n_slots, np.int32)   # next KV write position
-        self.slot_tok = np.zeros(n_slots, np.int32)   # last sampled token
+    def _reset_slots(self):
+        n = self.pool.n_slots
+        self.slot_req: list[Request | None] = [None] * n
+        self.slot_pos = np.zeros(n, np.int32)   # next KV/state write position
+        self.slot_tok = np.zeros(n, np.int32)   # last sampled token
+
+    # ----------------------------------------------------------- properties
+    @property
+    def n_slots(self) -> int:
+        return self.pool.n_slots
 
     @property
     def n_active(self) -> int:
@@ -120,12 +133,6 @@ class ServingEngine:
     def has_work(self) -> bool:
         return bool(self.queue) or self.n_active > 0
 
-    def _free_slot(self):
-        for i, r in enumerate(self.slot_req):
-            if r is None:
-                return i
-        return None
-
     # ----------------------------------------------------------- lifecycle
     def submit(self, req: Request, now: float | None = None):
         if req.max_new < 1:
@@ -140,18 +147,26 @@ class ServingEngine:
 
     # ----------------------------------------------------- compiled steps
     def _decode_exec(self):
-        key = ("decode", self.n_slots, self.setting["cache_dtype"])
+        key = ("decode",) + self.pool.exec_key()
 
         def build():
             cfg, ms = self.cfg, self.ms
 
             def f(params, cache, tok, pos):
-                return lm.decode_step(params, cache, tok, pos, cfg, ms)
+                logits, new_cache = lm.decode_step(params, cache, tok, pos,
+                                                   cfg, ms)
+                # pin state dtypes to the pool's (ssm conv windows come back
+                # in compute dtype) so the AOT signature is a fixed point
+                new_cache = jax.tree_util.tree_map(
+                    lambda n, o: n.astype(o.dtype), new_cache, cache)
+                return logits, new_cache
 
             # AOT: compile inside the reconfig window, not mid-tick
-            tok = jax.ShapeDtypeStruct((self.n_slots, 1), jnp.int32)
-            pos = jax.ShapeDtypeStruct((self.n_slots,), jnp.int32)
-            return aot_compile(f, self.params, self.pool, tok, pos)
+            n = self.pool.n_slots
+            cache = self.pool.decode_cache()
+            tok = jax.ShapeDtypeStruct((n, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((n,), jnp.int32)
+            return aot_compile(f, self.params, cache, tok, pos)
 
         return self._steps.get_or_create(key, build)
 
@@ -163,8 +178,11 @@ class ServingEngine:
             kn = ModelKnobs(k_chunk=self.setting["k_chunk"])
 
             def f(params, tokens, last_idx):
+                # valid_len: SSM families must not fold right-pad tokens
+                # into the recurrent state (attention ignores it)
                 hidden, _, cache = lm.forward(params, {"tokens": tokens},
-                                              cfg, ms, kn, mode="prefill")
+                                              cfg, ms, kn, mode="prefill",
+                                              valid_len=last_idx + 1)
                 last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1,
                                                     axis=1)
                 return lm.logits_fn(params, last, cfg, ms)[:, 0], cache
@@ -175,22 +193,53 @@ class ServingEngine:
 
         return self._steps.get_or_create(key, build)
 
+    def _chunk_prefill_exec(self, bucket: int):
+        """Chunked prefill against a prior cache: the suffix of a prompt
+        whose prefix is shared attends to the gathered prior KV and writes
+        its own KV in one multi-token decode step."""
+        key = ("chunkpf", bucket, self.setting["cache_dtype"])
+
+        def build():
+            cfg, ms = self.cfg, self.ms
+
+            def f(params, prior, tokens, start, last_idx):
+                # project only the last real suffix position to logits —
+                # a full (bucket, vocab) projection would cost bucket x
+                # the FLOPs for one usable row (same trick as _prefill_exec)
+                hidden, _, new_cache = lm.forward(
+                    params, {"tokens": tokens}, cfg, ms, mode="decode",
+                    cache=prior, pos=start)
+                last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1,
+                                                    axis=1)
+                return lm.logits_fn(params, last, cfg, ms)[:, 0], new_cache
+
+            L, K, hd = self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.hd
+            dt = pool_dtype(self.setting)
+            prior = {k: jax.ShapeDtypeStruct((L, 1, self.max_seq, K, hd), dt)
+                     for k in ("k", "v")}
+            tk = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
+            st = jax.ShapeDtypeStruct((1,), jnp.int32)
+            ix = jax.ShapeDtypeStruct((), jnp.int32)
+            return aot_compile(f, self.params, prior, tk, st, ix)
+
+        return self._steps.get_or_create(key, build)
+
     # -------------------------------------------------------------- admit
     def _bucket(self, plen: int, chunk: int | None = None) -> int:
         chunk = chunk or self.setting["prefill_chunk"]
         return min(-(-plen // chunk) * chunk, self.max_seq)
 
-    def _quant_exec(self, bucket: int):
+    def _quant_exec(self, n: int):
         """int8 KV storage: per-(layer,position) blockwise quantization via
-        the kernels/quant schedule (jnp oracle on CPU).  Compiled per prefill
-        bucket — a variable-length eager version would trigger per-prompt
+        the kernels/quant schedule (jnp oracle on CPU).  Compiled per row
+        count — a variable-length eager version would trigger per-prompt
         XLA op compiles on every admission."""
-        key = ("quant", bucket)
+        key = ("quant", n)
 
         def build():
             block = max(self.cfg.n_kv_heads * self.cfg.hd, 1)
 
-            def f(kv):                       # (L, bucket, K, hd)
+            def f(kv):                       # (L, n, K, hd)
                 flat = kv.reshape(-1).astype(jnp.float32)
                 half = jnp.full(flat.shape, 0.5, jnp.float32)  # det. rounding
                 q, scales = quantize_ref(flat, half, block=block)
@@ -200,22 +249,65 @@ class ServingEngine:
 
         return self._steps.get_or_create(key, build)
 
-    def _admit(self, req: Request):
-        slot = self._free_slot()
-        assert slot is not None
+    def _try_admit(self, req: Request) -> bool:
+        res = self.pool.try_admit(req.prompt, req.max_new)
+        if res is None:
+            return False
+        slot, shared = res
         P = len(req.prompt)
-        bucket = self._bucket(P)
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, :P] = req.prompt
-        logits, pcache = self._prefill_exec(bucket)(
-            self.params, jnp.asarray(padded), jnp.asarray(P - 1, jnp.int32))
-        for k in ("k", "v"):
-            kv = pcache[k][:, 0]                        # (L, bucket, K, hd)
+        if shared > 0:
+            # shared-prefix fast path: prefill only the suffix, chunked
+            # against the prior (shared) blocks; COW covers the case where
+            # the whole prompt matched and the last token re-lands in a
+            # shared block
+            sfx = req.prompt[shared:]
+            n = len(sfx)
+            bucket = self._bucket(n)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :n] = sfx
+            prior = self.pool.gather_dense(slot)
+            logits, newc = self._chunk_prefill_exec(bucket)(
+                self.params, prior, jnp.asarray(padded),
+                jnp.asarray([shared], jnp.int32),
+                jnp.asarray(n - 1, jnp.int32))
+            # quantize at bucket granularity (blockwise per-position, so
+            # quant-then-slice == slice-then-quant) to hit the warmed
+            # ("quant", bucket) executables instead of per-length compiles;
+            # when the cache boundary truncates the slice, zero-pad back to
+            # the bucket — padded positions form their own quant blocks and
+            # are discarded, never a cold mid-admission compile
+            m = min(bucket, self.max_seq - shared)
+            kv = {k: newc[k][:, 0, shared:shared + m] for k in ("k", "v")}
             if self.setting["quant"] == "int8":
-                kv = self._quant_exec(bucket)(kv)
-            self.pool[k] = self.pool[k].at[:, slot, :P].set(
-                kv[:, :P].astype(self.pool[k].dtype))
-        tok = int(jnp.argmax(logits[0]))
+                if m < bucket:
+                    kv = {k: jnp.pad(v, ((0, 0), (0, bucket - m),
+                                         (0, 0), (0, 0)))
+                          for k, v in kv.items()}
+                kv = {k: self._quant_exec(bucket)(v) for k, v in kv.items()}
+            self.pool.prepare_write(slot, shared, P)
+            self.pool.write_kv(slot, {k: v[:, :n] for k, v in kv.items()},
+                               start=shared)
+            tok = int(jnp.argmax(logits[0]))
+            self.prefill_tokens_computed += n
+        else:
+            bucket = self._bucket(P)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :P] = req.prompt
+            logits, pcache = self._prefill_exec(bucket)(
+                self.params, jnp.asarray(padded),
+                jnp.asarray(P - 1, jnp.int32))
+            if self.pool.kind == "paged":
+                kv = {k: pcache[k][:, 0] for k in ("k", "v")}
+                if self.setting["quant"] == "int8":
+                    kv = {k: self._quant_exec(bucket)(v)
+                          for k, v in kv.items()}
+                self.pool.write_kv(slot, {k: v[:, :P]
+                                          for k, v in kv.items()}, start=0)
+            else:
+                self.pool.write_prefill(slot, pcache, P)
+            tok = int(jnp.argmax(logits[0]))
+            self.prefill_tokens_computed += P
+        self.prefill_tokens_total += P
         req.tokens_out = [tok]
         req.first_token_s = self.clock
         self.total_tokens += 1
@@ -224,12 +316,14 @@ class ServingEngine:
         self.slot_tok[slot] = tok
         if len(req.tokens_out) >= req.max_new:
             self._complete(slot)
+        return True
 
     def _complete(self, slot: int):
         req = self.slot_req[slot]
         req.done_s = self.clock
         self.finished.append(req)
         self.slot_req[slot] = None
+        self.pool.release(slot)
 
     # ---------------------------------------------------------------- tick
     def step(self, now: float | None = None) -> dict:
@@ -240,23 +334,41 @@ class ServingEngine:
         self.ticks += 1
         tokens = 0
 
-        # admission: fill an idle engine greedily; interleave one prefill
-        # per quantum while decodes are running
+        # admission: fill an idle engine greedily; while decodes run, the
+        # continuous admit_budget knob meters prefills per quantum
         had_decodes = self.n_active > 0
-        admit_budget = 1 if had_decodes else self.setting["max_batch"]
-        while (self.queue and admit_budget > 0
-               and self.n_active < self.setting["max_batch"]
-               and self._free_slot() is not None):
-            self._admit(self.queue.popleft())
+        if had_decodes:
+            ab = float(self.setting.get("admit_budget", 1.0))
+            self._admit_acc = min(self._admit_acc + ab, max(ab, 4.0))
+            budget = int(self._admit_acc)
+            self._admit_acc -= budget
+        else:
+            self._admit_acc = 0.0
+            budget = int(self.setting["max_batch"])
+        while (self.queue and budget > 0
+               and self.n_active < self.setting["max_batch"]):
+            admitted = False
+            # block-aware lookahead: a long prompt whose blocks don't fit
+            # yet must not strand free slots for the small requests behind it
+            for i in range(min(len(self.queue), self.ADMIT_LOOKAHEAD)):
+                if self._try_admit(self.queue[i]):
+                    del self.queue[i]
+                    admitted = True
+                    break
+            if not admitted:
+                break
             tokens += 1
-            admit_budget -= 1
+            budget -= 1
 
         # decode: advance every live slot by one token
         if self.n_active > 0:
+            active = [i for i, r in enumerate(self.slot_req) if r is not None]
+            self.pool.prepare_step_writes(active, self.slot_pos)
             tok = jnp.asarray(self.slot_tok[:, None])
             pos = jnp.asarray(self.slot_pos)
-            logits, self.pool = self._decode_exec()(
-                self.params, self.pool, tok, pos)
+            logits, new_cache = self._decode_exec()(
+                self.params, self.pool.decode_cache(), tok, pos)
+            self.pool.set_cache(new_cache)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
             for slot, req in enumerate(self.slot_req):
                 if req is None:
@@ -273,7 +385,7 @@ class ServingEngine:
         # a shrink that had to wait for live slots (relayout keeps every
         # in-flight request) completes once the backlog drains; otherwise
         # decode keeps paying for an oversized pool
-        if (self.n_slots > self.setting["max_batch"]
+        if (self.pool.n_slots > self.setting["max_batch"]
                 and self.n_active <= self.setting["max_batch"]):
             self._relayout_pool()
 
@@ -285,8 +397,9 @@ class ServingEngine:
     # ------------------------------------------------------------ reconfig
     def warm_start(self, space=None, max_prompt: int | None = None):
         """Pre-compile the executables the knob space can reach (server
-        startup warmup, standard serving practice): decode per
-        (max_batch, cache_dtype), prefill per (bucket, k_chunk).  After
+        startup warmup, standard serving practice): decode per pool layout
+        (max_batch, cache_dtype, block_size), prefill per (bucket, k_chunk),
+        chunked shared-prefix prefill per (bucket, cache_dtype).  After
         this, online Type II reconfigurations are warm executable swaps —
         the regime the decaying ReconfigCostModel is built to track.
         ``space=None`` warms only the current (frozen) setting."""
@@ -294,34 +407,55 @@ class ServingEngine:
         if space is None:
             values = {k: (v,) for k, v in self.setting.items()}
         else:
-            values = {k.name: k.values for k in space.knobs}
+            # continuous knobs (admit_budget) never change an executable
+            values = {k.name: (k.values if k.kind != "continuous"
+                               else (self.setting.get(k.name),))
+                      for k in space.knobs}
         save_setting = dict(self.setting)
+        paged = self.pool.kind == "paged"
         chunks = values.get("prefill_chunk", (save_setting["prefill_chunk"],))
         hi = min(max_prompt or self.max_seq, self.max_seq)
         buckets = sorted({self._bucket(p, c)
                           for c in chunks for p in range(1, hi + 1)})
+        mbs = values.get("max_batch", (save_setting["max_batch"],))
+        cds = values.get("cache_dtype", (save_setting["cache_dtype"],))
+        bss = (values.get("block_size", (save_setting["block_size"],))
+               if paged else (None,))
+        kcs = values.get("k_chunk", (save_setting["k_chunk"],))
+        share = paged and any(values.get("prefix_share", (False,)))
         # everything warmed must fit, or we would evict what we just built
-        planned = (len(values.get("max_batch", (1,)))
-                   * len(values.get("cache_dtype", (1,)))
-                   + len(values.get("k_chunk", (1,))) * len(buckets)
+        planned = (len(mbs) * len(cds) * len(bss)
+                   + len(kcs) * len(buckets)
+                   + (len(cds) * len(buckets) if share else 0)
                    + (len(buckets) if "int8" in values.get("quant", ())
                       else 0))
         self._steps.capacity = max(self._steps.capacity, planned + 2)
-        for mb in values.get("max_batch", (self.setting["max_batch"],)):
-            for cd in values.get("cache_dtype",
-                                 (self.setting["cache_dtype"],)):
-                self.setting.update(max_batch=mb, cache_dtype=cd)
-                self._alloc_pool(mb)
-                self._decode_exec()
-        for kc in values.get("k_chunk", (save_setting["k_chunk"],)):
+        for mb in mbs:
+            for cd in cds:
+                for bsz in bss:
+                    self.setting.update(max_batch=mb, cache_dtype=cd)
+                    if bsz is not None:
+                        self.setting["block_size"] = bsz
+                    self.pool = make_state_pool(
+                        self.cfg, self.setting, self.max_seq, self.ms,
+                        overcommit=self.block_overcommit)
+                    self._decode_exec()
+        for kc in kcs:
             self.setting["k_chunk"] = kc
             for b in buckets:
                 self._prefill_exec(b)
+        if share:
+            for cd in cds:
+                self.setting["cache_dtype"] = cd
+                for b in buckets:
+                    self._chunk_prefill_exec(b)
         if "int8" in values.get("quant", ()):
             for b in buckets:
                 self._quant_exec(b)
         self.setting = save_setting
-        self._alloc_pool(self.setting["max_batch"])
+        self.pool = make_state_pool(self.cfg, self.setting, self.max_seq,
+                                    self.ms, overcommit=self.block_overcommit)
+        self._reset_slots()
 
     def reconfigure(self, new_setting: dict) -> float:
         """Plan + execute a switch to ``new_setting`` (classifying the
@@ -334,9 +468,11 @@ class ServingEngine:
         """Execute a reconfiguration; returns its observed cost (seconds).
 
         Type I-b: ODMR-style pool re-layout (new ``max_batch`` /
-        ``cache_dtype``) — live slots are relocated into the new pool, the
-        queue keeps filling, nothing is dropped.  Type II: the decode
-        executable for the new setting is AOT-compiled inside this window.
+        ``block_size`` / ``cache_dtype``) — only live blocks/slots relocate
+        into the new pool, the queue keeps filling, nothing is dropped.
+        Type II: the decode executable for the new setting is AOT-compiled
+        inside this window (policy-only knobs like ``admit_budget`` and
+        ``prefix_share`` take effect immediately).
 
         The relayout decision is re-derived here with the engine's own knob
         classes rather than trusted from ``plan.kinds`` — a tuner wired
@@ -345,33 +481,31 @@ class ServingEngine:
         t0 = time.perf_counter()
         kinds = rc_classify(self.setting, plan.new,
                             mesh_knobs=SERVING_RELAYOUT_KNOBS)
-        self.setting = dict(plan.new)
+        self.setting.update(plan.new)
         if "I-b" in kinds:
             self._relayout_pool()
+        else:
+            self.pool.setting = dict(self.setting)   # policy knobs
         # warm the hot-path executable for the new setting (SSR)
         self._decode_exec()
-        jax.block_until_ready(self.pool)
+        jax.block_until_ready(self.pool.decode_cache())
         return time.perf_counter() - t0
 
     def _relayout_pool(self):
-        live = [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
-        n_new = max(self.setting["max_batch"], len(live))
-        old_pool = self.pool
-        old_pos, old_tok = self.slot_pos, self.slot_tok
-        self._alloc_pool(n_new)
-        for new_slot, (old_slot, req) in enumerate(live):
-            for k in old_pool:
-                self.pool[k] = self.pool[k].at[:, new_slot].set(
-                    old_pool[k][:, old_slot].astype(self.pool[k].dtype))
-            self.slot_req[new_slot] = req
-            self.slot_pos[new_slot] = old_pos[old_slot]
-            self.slot_tok[new_slot] = old_tok[old_slot]
-        if self.ms is not None:
-            # place the new pool per the mesh (single transition, paper §V)
-            from repro.distributed.sharding import param_specs
-            from repro.ps.odmr import relocate_now
-            self.pool = relocate_now(self.pool,
-                                     param_specs(self.pool, self.ms), self.ms)
+        live_extents = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            written = int(self.slot_pos[slot])      # state valid for [0, w)
+            reserved = min(len(req.prompt) + req.max_new, self.max_seq)
+            live_extents[slot] = (written, reserved)
+        old_req, old_pos, old_tok = self.slot_req, self.slot_pos, self.slot_tok
+        mapping = self.pool.relayout(self.setting, live_extents)
+        self._reset_slots()
+        for old, new in mapping.items():
+            self.slot_req[new] = old_req[old]
+            self.slot_pos[new] = old_pos[old]
+            self.slot_tok[new] = old_tok[old]
 
 
 def serve_loop(engine: ServingEngine, trace, tuner=None, *,
@@ -387,6 +521,10 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
     n_req = len(pending)
     tok0 = engine.total_tokens          # deltas: engines may be re-used
     fin0 = len(engine.finished)
+    pf0 = engine.prefill_tokens_computed
+    pt0 = engine.prefill_tokens_total
+    sh0 = engine.pool.shared_blocks_hit
+    cow0 = engine.pool.cow_copies
     t_start = time.perf_counter()
     reconfigs = []
     reconfig_total_s = 0.0
@@ -443,5 +581,10 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         "reconfig_total_s": reconfig_total_s,
         "final_setting": dict(engine.setting),
         "timeline": timeline,
+        # prefix-sharing / paging effectiveness (pool counters, deltas)
+        "prefill_tokens_computed": engine.prefill_tokens_computed - pf0,
+        "prefill_tokens_total": engine.prefill_tokens_total - pt0,
+        "shared_blocks_hit": engine.pool.shared_blocks_hit - sh0,
+        "cow_copies": engine.pool.cow_copies - cow0,
     }
     return stats

@@ -8,22 +8,33 @@ scales served here, and the engine's reference test pins the exact-output
 settings).
 
 Knob classes for reconfiguration planning (repro.core.reconfig):
-  * ``max_batch`` / ``cache_dtype`` re-layout the slot KV pool — model-data
-    relocation, Type I-b, executed ODMR-style (allocate new pool, relocate
-    live slots, no quiesce of the request queue);
-  * everything else only swaps the compiled step — Type II (SSR).
+  * ``max_batch`` / ``cache_dtype`` / ``block_size`` re-layout the state
+    pool — model-data relocation, Type I-b, executed ODMR-style at block
+    granularity (allocate the new pool, relocate live blocks/slots, no
+    quiesce of the request queue);
+  * everything else only swaps the compiled step or the admission policy —
+    Type II (SSR).
+
+``admit_budget`` is the continuous knob (prefills admitted per scheduling
+quantum while decodes run, fractional values accumulate): the ROADMAP's
+"continuous-valued knobs" item.  ``prefix_share`` gates copy-on-write
+prompt-prefix sharing in the paged pool.  SSM/hybrid families have no KV
+sequence axis, so their space drops the paging and quantization knobs.
 """
 from __future__ import annotations
 
 from repro.core.knobs import Knob, KnobSpace
 
-# Type I-b knobs: changing them relocates the KV pool (the serving engine's
-# "model data"). Passed to reconfig.classify/plan as mesh_knobs.
-SERVING_RELAYOUT_KNOBS = ("max_batch", "cache_dtype")
+# Type I-b knobs: changing them relocates the state pool (the serving
+# engine's "model data"). Passed to reconfig.classify/plan as mesh_knobs.
+SERVING_RELAYOUT_KNOBS = ("max_batch", "cache_dtype", "block_size")
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 def serving_knob_space(max_batch_ceiling: int = 8,
-                       include_batches: tuple = ()) -> KnobSpace:
+                       include_batches: tuple = (),
+                       family: str = "dense") -> KnobSpace:
     # the ceiling (and any caller-supplied x0 value) is always a member, so
     # every starting setting encodes into the space
     batches = tuple(sorted({b for b in (1, 2, 4, 8, 16)
@@ -31,21 +42,31 @@ def serving_knob_space(max_batch_ceiling: int = 8,
                            | {max_batch_ceiling}
                            | {b for b in include_batches
                               if 1 <= b <= max_batch_ceiling}))
-    return KnobSpace((
+    knobs = [
         Knob("max_batch", "ordinal", batches),
         Knob("prefill_chunk", "ordinal", (16, 32)),
-        Knob("quant", "nominal", ("none", "int8")),
         Knob("k_chunk", "ordinal", (128, 256)),
         Knob("cache_dtype", "nominal", ("bf16", "f32")),
-    ))
+        Knob("admit_budget", "continuous", (0.5, 4.0)),
+    ]
+    if family in PAGED_FAMILIES:
+        knobs += [
+            Knob("quant", "nominal", ("none", "int8")),
+            Knob("block_size", "ordinal", (8, 16)),
+            Knob("prefix_share", "bool", (False, True)),
+        ]
+    return KnobSpace(tuple(knobs))
 
 
 # Mirrors the pre-engine one-shot script: one request at a time, conservative
-# precision — the fixed baseline the benchmarks compare against.
+# precision, no sharing — the fixed baseline the benchmarks compare against.
 DEFAULT_SERVING_SETTING = {
     "max_batch": 1,
     "prefill_chunk": 16,
     "quant": "none",
     "k_chunk": 128,
     "cache_dtype": "f32",
+    "block_size": 16,
+    "prefix_share": False,
+    "admit_budget": 1.0,
 }

@@ -1,0 +1,524 @@
+"""Pluggable serving state pools — the engine's memory layer.
+
+``StatePool`` abstracts *where a request's decode state lives* so the
+ServingEngine schedules every model family through one interface:
+
+  * ``PagedKVPool`` (attention families: dense / moe / vlm): KV lives in
+    fixed-size blocks addressed through per-request block tables
+    (``models.lm`` paged decode path).  Whole prompt blocks are shared
+    between requests copy-on-write — refcounted physical blocks keyed by a
+    chained hash of the block's tokens — so identical prompt prefixes are
+    prefilled once.  Admission is block-granular: a request reserves
+    ``ceil(tokens/block_size)`` blocks, not a max-seq slab, so a short
+    request never pays for the long-request worst case and a long prompt
+    can't strand otherwise-usable memory.
+
+  * ``SSMStatePool`` (ssm / hybrid): per-slot recurrent state (conv window
+    + SSM state; hybrid adds the shared-attention KV slab).  No sequence
+    axis — a slot is O(1) memory at any sequence length, so there is
+    nothing to page; Type I-b re-layouts relocate slot rows.
+
+Both execute Type I-b re-layouts with ``repro.ps.odmr.relocate_rows``:
+only live rows (blocks / slots) move into the new allocation, the request
+queue is never quiesced, and every in-flight request keeps its tokens.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.ps.odmr import relocate_rows
+
+TRASH_BLOCK = 0     # physical block 0 is reserved: inactive/padded writes
+                    # land there so a stale table row can never corrupt a
+                    # live request's blocks
+
+
+def pool_dtype(setting: dict):
+    return jnp.float32 if setting.get("cache_dtype") == "f32" else jnp.bfloat16
+
+
+def _block_chain_key(parent, tokens: np.ndarray):
+    """Content hash chain: a block's identity is its tokens *and* its whole
+    prefix, so equal blocks at different prompt offsets never alias.  Keys
+    hash a canonical int32 byte view — an int64 prompt array from one
+    client must match the same tokens submitted as int32."""
+    return hash((parent, np.ascontiguousarray(tokens, np.int32).tobytes()))
+
+
+class StatePool:
+    """Interface the ServingEngine schedules against (duck-typed; the two
+    implementations below subclass it for discoverability, not dispatch).
+
+    Memory protocol, per request lifetime:
+      ``try_admit(prompt, max_new)`` reserves a slot (+ memory) or returns
+      None; ``write_kv``/``write_prefill`` land the prefill state;
+      ``prepare_write``/``prepare_step_writes`` resolve copy-on-write before
+      any in-place write; ``decode_cache``/``set_cache`` bracket the
+      compiled decode step; ``release(slot)`` returns the memory.
+    ``relayout(setting, live_extents)`` executes a Type I-b re-layout that
+    migrates only live state and returns the {old_slot: new_slot} mapping.
+    ``exec_key()`` names the pool geometry for the executable LRU.
+    """
+
+    kind = "abstract"
+    n_slots = 0
+    # counters every pool reports (benchmarks read them)
+    shared_blocks_hit = 0
+    cow_copies = 0
+    cache_evictions = 0
+
+    def reset_prefix_cache(self):
+        pass                               # only the paged pool has one
+
+
+class PagedKVPool(StatePool):
+    """Paged KV cache with block tables, prefix sharing, and COW."""
+
+    kind = "paged"
+
+    def __init__(self, cfg, setting: dict, max_seq: int, ms=None,
+                 n_slots: int | None = None, overcommit: float = 1.0):
+        assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+        self.cfg = cfg
+        self.ms = ms
+        self.max_seq = max_seq
+        self.setting = dict(setting)
+        # overcommit < 1 under-provisions blocks relative to the dense
+        # worst case (n_slots full sequences) — the paging memory win.
+        # Admission then genuinely contends on blocks, not just slots.
+        self.overcommit = overcommit
+        # counters (benchmarks report these)
+        self.shared_blocks_hit = 0
+        self.cow_copies = 0
+        self.cache_evictions = 0
+        self._alloc(n_slots or setting["max_batch"])
+
+    # ------------------------------------------------------------ allocation
+    def _alloc(self, n_slots: int, min_blocks: int = 0):
+        self.n_slots = n_slots
+        self.bs = int(self.setting["block_size"])
+        self.mb = -(-self.max_seq // self.bs)           # table width
+        usable = int(np.ceil(n_slots * self.mb * self.overcommit))
+        self.nb = max(usable, self.mb, min_blocks) + 1  # +1: trash block
+        dt = pool_dtype(self.setting)
+        shapes = lm.init_paged_cache_shapes(self.cfg, self.nb, self.bs)
+        self.kv = {k: jnp.zeros(s.shape, dt) for k, s in shapes.items()}
+        self.ref = np.zeros(self.nb, np.int32)
+        self.ref[TRASH_BLOCK] = 1                       # pinned
+        self.tables = np.zeros((n_slots, self.mb), np.int32)
+        self.slot_blocks: list[list[int]] = [[] for _ in range(n_slots)]
+        self.slot_live = [False] * n_slots
+        self._free = set(range(1, self.nb))
+        # prefix cache: chain key <-> cached physical block (refcount may be
+        # 0 — then the block is evictable, LRU by touch order)
+        self.prefix: dict[int, int] = {}
+        self.block_key: dict[int, int] = {}
+        self._touch: dict[int, int] = {}
+        self._tick = 0
+
+    @property
+    def n_active(self) -> int:
+        return sum(self.slot_live)
+
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def evictable_blocks(self) -> int:
+        return sum(1 for b in self.block_key if self.ref[b] == 0)
+
+    def exec_key(self) -> tuple:
+        return ("paged", self.n_slots, self.nb, self.bs,
+                self.setting.get("cache_dtype"))
+
+    # ------------------------------------------------------- block plumbing
+    def _alloc_block(self) -> int | None:
+        if self._free:
+            return self._free.pop()
+        # evict the least-recently-touched cached block with refcount 0
+        cands = [b for b in self.block_key if self.ref[b] == 0]
+        if not cands:
+            return None
+        victim = min(cands, key=lambda b: self._touch.get(b, 0))
+        self._uncache(victim)
+        self.cache_evictions += 1
+        return victim
+
+    def _uncache(self, block: int):
+        key = self.block_key.pop(block, None)
+        if key is not None:
+            self.prefix.pop(key, None)
+        self._touch.pop(block, None)
+
+    def reset_prefix_cache(self):
+        """Drop every cached (refcount-0) prefix block and forget the keys
+        of live shared blocks.  Benchmarks call this between arms so one
+        arm's prefills can never serve another's admissions."""
+        for b in list(self.block_key):
+            self._uncache(b)
+            if self.ref[b] == 0:
+                self._free.add(b)
+
+    def _release_block(self, block: int):
+        self.ref[block] -= 1
+        assert self.ref[block] >= 0
+        if self.ref[block] == 0 and block not in self.block_key:
+            self._free.add(block)
+
+    # ------------------------------------------------------------- admission
+    def blocks_needed(self, prompt_len: int, max_new: int) -> int:
+        tokens = min(prompt_len + max_new, self.max_seq)
+        return -(-tokens // self.bs)
+
+    def try_admit(self, prompt: np.ndarray, max_new: int):
+        """Reserve a slot + blocks for the request.  Returns
+        ``(slot, shared_len)`` — ``shared_len`` tokens of the prompt already
+        have KV in (refcounted) shared blocks — or None if slots or blocks
+        are exhausted.  Never quiesces: a failed reservation rolls back."""
+        slot = next((i for i, live in enumerate(self.slot_live) if not live),
+                    None)
+        if slot is None:
+            return None
+        P = len(prompt)
+        total_blocks = self.blocks_needed(P, max_new)
+
+        matched: list[int] = []
+        chain = 0
+        keys: list[int] = []          # chain key per full prompt block
+        for i in range(P // self.bs):
+            chain = _block_chain_key(chain, prompt[i * self.bs:
+                                                  (i + 1) * self.bs])
+            keys.append(chain)
+        if self.setting.get("prefix_share"):
+            for key in keys:
+                b = self.prefix.get(key)
+                if b is None:
+                    break
+                matched.append(b)
+        shared_len = len(matched) * self.bs
+        # always recompute >= 1 token so admission yields first-token logits;
+        # a full-prompt match then writes into the last shared block -> COW
+        suffix_start = min(shared_len, P - 1)
+        needs_cow = suffix_start < shared_len
+
+        blocks = list(matched)
+        for b in matched:
+            self.ref[b] += 1
+            self._free.discard(b)
+            self._tick += 1
+            self._touch[b] = self._tick
+        # capacity check BEFORE any eviction: the allocation loop below
+        # evicts cached blocks on demand, and a doomed admission must not
+        # strip the prefix cache on its way to a rollback.  (Matched blocks
+        # were pinned above, so they no longer count as evictable.)
+        need = total_blocks - len(matched) + (1 if needs_cow else 0)
+        if len(self._free) + self.evictable_blocks() < need:
+            for b in matched:
+                self._release_block(b)
+            return None
+        for _ in range(total_blocks - len(matched)):
+            b = self._alloc_block()
+            assert b is not None, "capacity was checked above"
+            self.ref[b] = 1
+            blocks.append(b)
+
+        self.shared_blocks_hit += len(matched)
+        self.tables[slot, :] = TRASH_BLOCK
+        self.tables[slot, :len(blocks)] = blocks
+        self.slot_blocks[slot] = blocks
+        self.slot_live[slot] = True
+        # register this request's full prompt blocks so concurrent identical
+        # prompts share them (their KV is written before the next admission).
+        # Only while sharing is on: a share-disabled pool must not build a
+        # cache that a later share-enabled phase silently hits.
+        if self.setting.get("prefix_share"):
+            for key, b in zip(keys, blocks):
+                if key not in self.prefix and self.ref[b] >= 1:
+                    self.prefix[key] = b
+                    self.block_key[b] = key
+                    self._tick += 1
+                    self._touch[b] = self._tick
+        return slot, suffix_start
+
+    def release(self, slot: int):
+        for b in self.slot_blocks[slot]:
+            self._release_block(b)
+        self.slot_blocks[slot] = []
+        self.tables[slot, :] = TRASH_BLOCK
+        self.slot_live[slot] = False
+
+    # -------------------------------------------------------------- writing
+    def prepare_write(self, slot: int, start: int, end: int):
+        """Copy-on-write: any shared block overlapping write range
+        [start, end) is copied into a private block first."""
+        for lb in range(start // self.bs, -(-end // self.bs)):
+            b = int(self.tables[slot, lb])
+            if self.ref[b] <= 1:
+                continue
+            nb = self._alloc_block()
+            assert nb is not None, "COW block reserved at admission"
+            for k in self.kv:
+                self.kv[k] = self.kv[k].at[:, nb].set(self.kv[k][:, b])
+            self.ref[nb] = 1
+            self.ref[b] -= 1
+            self.tables[slot, lb] = nb
+            self.slot_blocks[slot][lb] = nb
+            self.cow_copies += 1
+
+    def write_kv(self, slot: int, kv: dict, start: int):
+        """Scatter per-token KV rows (L, n, K, hd) into the slot's blocks
+        starting at logical position ``start``."""
+        n = next(iter(kv.values())).shape[1]
+        pos = np.arange(start, start + n)
+        blk = jnp.asarray(self.tables[slot, pos // self.bs])
+        off = jnp.asarray(pos % self.bs)
+        for k, rows in kv.items():
+            self.kv[k] = self.kv[k].at[:, blk, off].set(
+                rows.astype(self.kv[k].dtype))
+
+    def gather_dense(self, slot: int) -> dict:
+        """Materialize the slot's logical KV as a dense (L, 1, max_seq, K,
+        hd) cache — the prior for chunked prefill against a shared prefix
+        (the jnp analogue of a paged-attention kernel's gather)."""
+        bt = jnp.asarray(self.tables[slot])
+        out = {}
+        for k, pool in self.kv.items():
+            L, _, bs, K, hd = pool.shape
+            g = pool[:, bt].reshape(L, self.mb * bs, K, hd)[:, :self.max_seq]
+            out[k] = g[:, None]
+        return out
+
+    # --------------------------------------------------------------- decode
+    def decode_cache(self) -> dict:
+        return {"k": self.kv["k"], "v": self.kv["v"],
+                "block_tables": jnp.asarray(self.tables, jnp.int32)}
+
+    def set_cache(self, new_cache: dict):
+        self.kv = {"k": new_cache["k"], "v": new_cache["v"]}
+
+    def prepare_step_writes(self, slots, positions):
+        for s in slots:
+            p = int(positions[s])
+            self.prepare_write(s, p, p + 1)
+
+    # -------------------------------------------------------------- relayout
+    def relayout(self, new_setting: dict, live_extents: dict,
+                 min_slots: int = 0) -> dict:
+        """Type I-b re-layout into the geometry of ``new_setting``.
+
+        ``live_extents``: {slot: (tokens_written, tokens_reserved)} for live
+        slots.  Same block size: only live + (capacity permitting) cached
+        blocks migrate, tables are remapped in place.  Block-size change:
+        each live slot's logical KV is re-blocked (the prefix cache cannot
+        survive — its keys are per-block-geometry — so it resets).
+        Returns {old_slot: new_slot}."""
+        old_bs = self.bs
+        old_kv, old_tables = self.kv, self.tables
+        old_blocks = {s: list(bl) for s, bl in enumerate(self.slot_blocks)}
+        old_key = dict(self.block_key)
+        old_touch = dict(self._touch)
+        old_ref = self.ref
+        live = sorted(live_extents)
+
+        # live data must fit even in an under-provisioned (overcommitted)
+        # new pool: floor the block count at what the live set needs
+        new_bs = int(new_setting["block_size"])
+        if new_bs == old_bs:
+            min_blocks = len({b for s in live for b in old_blocks[s]})
+        else:
+            min_blocks = sum(
+                -(-max(live_extents[s][1], live_extents[s][0], 1) // new_bs)
+                for s in live)
+        self.setting = dict(new_setting)
+        self._alloc(max(int(new_setting["max_batch"]), len(live), min_slots,
+                        1), min_blocks=min_blocks)
+        mapping = {s: i for i, s in enumerate(live)}
+
+        if self.bs == old_bs:
+            # block-granular migration: live blocks always move; cached
+            # (refcount-0) blocks move while free space remains, LRU first
+            keep = []
+            seen = set()
+            for s in live:
+                for b in old_blocks[s]:
+                    if b not in seen:
+                        seen.add(b)
+                        keep.append(b)
+            cached = sorted((b for b in old_key
+                             if old_ref[b] == 0 and b not in seen),
+                            key=lambda b: -old_touch.get(b, 0))
+            budget = (self.nb - 1) - len(keep)
+            dropped = cached[max(budget, 0):]
+            self.cache_evictions += len(dropped)
+            keep.extend(cached[:max(budget, 0)])
+            remap = {b: i + 1 for i, b in enumerate(keep)}
+            self.kv = relocate_rows(old_kv, self.kv,
+                                    [b for b in keep],
+                                    [remap[b] for b in keep], axis=1)
+            for s in live:
+                ns = mapping[s]
+                self.slot_blocks[ns] = [remap[b] for b in old_blocks[s]]
+                self.tables[ns, :len(self.slot_blocks[ns])] = \
+                    self.slot_blocks[ns]
+                self.slot_live[ns] = True
+            for s in live:
+                for b in self.slot_blocks[mapping[s]]:
+                    self.ref[b] += 1
+            for b, key in old_key.items():
+                if b in remap:
+                    nb = remap[b]
+                    self.block_key[nb] = key
+                    self.prefix[key] = nb
+                    self._touch[nb] = old_touch.get(b, 0)
+            self._tick = max(old_touch.values(), default=0)
+            self._free -= {remap[b] for b in keep}
+        else:
+            # re-block: gather each live slot dense from the old geometry,
+            # reserve new-size blocks, scatter back
+            for s in live:
+                written, reserved = live_extents[s]
+                ns = mapping[s]
+                n_blocks = -(-max(reserved, written, 1) // self.bs)
+                blocks = []
+                for _ in range(n_blocks):
+                    b = self._alloc_block()
+                    assert b is not None, "shrunk pool cannot hold live data"
+                    self.ref[b] = 1
+                    blocks.append(b)
+                self.slot_blocks[ns] = blocks
+                self.tables[ns, :len(blocks)] = blocks
+                self.slot_live[ns] = True
+                if written == 0:
+                    continue
+                bt = jnp.asarray(old_tables[s])
+                pos = np.arange(written)
+                blk = jnp.asarray(np.asarray(self.tables[ns])[pos // self.bs])
+                off = jnp.asarray(pos % self.bs)
+                for k in self.kv:
+                    L, _, obs, K, hd = old_kv[k].shape
+                    g = old_kv[k][:, bt].reshape(L, self.mb_of(obs) * obs,
+                                                 K, hd)[:, :written]
+                    self.kv[k] = self.kv[k].at[:, blk, off].set(
+                        g.astype(self.kv[k].dtype))
+        self._place()
+        return mapping
+
+    def mb_of(self, bs: int) -> int:
+        return -(-self.max_seq // bs)
+
+    def _place(self):
+        if self.ms is not None:
+            # place the new pool per the mesh (single transition, paper §V)
+            from repro.distributed.sharding import param_specs
+            from repro.ps.odmr import relocate_now
+            self.kv = relocate_now(self.kv, param_specs(self.kv, self.ms),
+                                   self.ms)
+
+
+class SSMStatePool(StatePool):
+    """Per-slot recurrent state for ssm / hybrid families.
+
+    State has no sequence axis (conv window + SSM state are O(1) per slot),
+    so admission is slot-granular and there is nothing to page or share.
+    The hybrid family's shared-attention KV slab rides along as dense
+    per-slot rows.  ``cache_dtype`` applies to the conv window and shared
+    KV; the SSM state ``h`` stays float32 — the recurrence accumulates, and
+    truncating it is a correctness knob, not an efficiency knob."""
+
+    kind = "ssm"
+
+    def __init__(self, cfg, setting: dict, max_seq: int, ms=None,
+                 n_slots: int | None = None):
+        assert cfg.family in ("ssm", "hybrid"), cfg.family
+        self.cfg = cfg
+        self.ms = ms
+        self.max_seq = max_seq
+        self.setting = dict(setting)
+        self.shared_blocks_hit = 0
+        self.cow_copies = 0
+        self.cache_evictions = 0
+        self._alloc(n_slots or setting["max_batch"])
+
+    def _alloc(self, n_slots: int):
+        self.n_slots = n_slots
+        dt = pool_dtype(self.setting)
+        shapes = lm.init_cache_shapes(self.cfg, n_slots, self.max_seq)
+        self.state = {
+            k: jnp.zeros(s.shape, jnp.float32 if k == "h" else dt)
+            for k, s in shapes.items()}
+        self.slot_live = [False] * n_slots
+
+    @property
+    def n_active(self) -> int:
+        return sum(self.slot_live)
+
+    def exec_key(self) -> tuple:
+        return ("ssm", self.n_slots, self.setting.get("cache_dtype"))
+
+    def try_admit(self, prompt: np.ndarray, max_new: int):
+        slot = next((i for i, live in enumerate(self.slot_live) if not live),
+                    None)
+        if slot is None:
+            return None
+        self.slot_live[slot] = True
+        return slot, 0
+
+    def release(self, slot: int):
+        self.slot_live[slot] = False
+
+    def write_prefill(self, slot: int, pcache: dict, P: int):
+        for k, v in pcache.items():
+            if k.startswith("shared"):       # (n_apps, 1, S, K, hd)
+                self.state[k] = self.state[k].at[:, slot, :P].set(
+                    v[:, 0, :P].astype(self.state[k].dtype))
+            else:                            # (L, 1, ...)
+                self.state[k] = self.state[k].at[:, slot].set(
+                    v[:, 0].astype(self.state[k].dtype))
+
+    def decode_cache(self) -> dict:
+        return dict(self.state)
+
+    def set_cache(self, new_cache: dict):
+        # the model computes the conv window in compute dtype; pin the pool
+        # dtypes so the AOT decode executable's signature stays stable
+        self.state = {k: new_cache[k].astype(self.state[k].dtype)
+                      for k in self.state}
+
+    def prepare_step_writes(self, slots, positions):
+        pass                                  # recurrent state: no COW
+
+    def relayout(self, new_setting: dict, live_extents: dict,
+                 min_slots: int = 0) -> dict:
+        live = sorted(live_extents)
+        old_state = self.state
+        self.setting = dict(new_setting)
+        self._alloc(max(int(new_setting["max_batch"]), len(live), min_slots,
+                        1))
+        mapping = {s: i for i, s in enumerate(live)}
+        self.state = relocate_rows(old_state, self.state, live,
+                                   [mapping[s] for s in live], axis=1)
+        for s in live:
+            self.slot_live[mapping[s]] = True
+        if self.ms is not None:
+            from repro.distributed.sharding import param_specs
+            from repro.ps.odmr import relocate_now
+            self.state = relocate_now(self.state,
+                                      param_specs(self.state, self.ms),
+                                      self.ms)
+        return mapping
+
+
+def make_state_pool(cfg, setting: dict, max_seq: int, ms=None,
+                    n_slots: int | None = None, overcommit: float = 1.0):
+    """Family dispatch: paged KV for attention families, recurrent-state
+    slots for ssm/hybrid.  Encoder-only models have no decode state.
+    ``overcommit`` under-provisions paged blocks relative to the dense
+    worst case (ignored by the slot-granular ssm pool)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return PagedKVPool(cfg, setting, max_seq, ms, n_slots, overcommit)
+    if cfg.family in ("ssm", "hybrid"):
+        return SSMStatePool(cfg, setting, max_seq, ms, n_slots)
+    raise NotImplementedError(
+        f"no serving state pool for family={cfg.family!r} "
+        f"(encoder-only models have no decode step)")

@@ -101,11 +101,51 @@ def mixed_lengths_trace(rate_rps: float, duration_s: float, *, vocab: int,
     return out
 
 
+def shared_prefix_trace(rate_rps: float, duration_s: float, *, vocab: int,
+                        seed: int = 0, n_templates: int = 2,
+                        prefix_len: int = 32, tail_lens=(2, 8),
+                        prompt_lens=None, max_news=(8, 24)):
+    """Few-shot / system-prompt traffic: every request is one of
+    ``n_templates`` fixed prefixes plus a short unique tail — the regime
+    where the paged pool's copy-on-write prefix sharing should collapse
+    per-request prefill work to the tail."""
+    del prompt_lens                       # prefix_len/tail_lens control size
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, (prefix_len,)).astype(np.int32)
+                 for _ in range(n_templates)]
+    times = _thinned_poisson(lambda t: rate_rps, rate_rps, duration_s, rng)
+    out = []
+    for i, t in enumerate(times):
+        tpl = templates[int(rng.integers(0, n_templates))]
+        tail = rng.integers(0, vocab,
+                            (int(rng.integers(tail_lens[0],
+                                              tail_lens[1] + 1)),))
+        prompt = np.concatenate([tpl, tail.astype(np.int32)])
+        mnew = int(rng.integers(max_news[0], max_news[1] + 1))
+        out.append(Request(rid=i, prompt=prompt, max_new=mnew,
+                           arrival_s=float(t)))
+    return out
+
+
+def long_prompt_trace(rate_rps: float, duration_s: float, *, vocab: int,
+                      seed: int = 0, prompt_lens=(40, 68), max_news=(4, 12)):
+    """Document-heavy traffic: prompts near the sequence capacity with short
+    generations — stresses block-granular admission (a max-seq slab pool
+    strands memory; the paged pool reserves only the blocks each request
+    needs)."""
+    rng = np.random.default_rng(seed)
+    times = _thinned_poisson(lambda t: rate_rps, rate_rps, duration_s, rng)
+    return [_mk_request(i, t, rng, vocab, prompt_lens, max_news)
+            for i, t in enumerate(times)]
+
+
 SCENARIOS = {
     "poisson": poisson_trace,
     "bursty": bursty_trace,
     "diurnal": diurnal_trace,
     "mixed_lengths": mixed_lengths_trace,
+    "shared_prefix": shared_prefix_trace,
+    "long_prompt": long_prompt_trace,
 }
 
 

@@ -103,3 +103,70 @@ def test_bo_diverged_window_is_penalized():
     bo.observe({"a": 2}, loss=0.9, Y=9.0)
     sugg, _, _ = bo.suggest(current_loss=0.9)
     assert sugg["a"] == 2
+
+
+def _cont_space():
+    return KnobSpace((
+        Knob("a", "ordinal", (1, 2, 4)),
+        Knob("budget", "continuous", (0.5, 4.0)),
+    ))
+
+
+def test_continuous_knob_encode_sample_neighbors():
+    import random
+    sp = _cont_space()
+    assert sp.dim() == 2
+    assert sp.encode({"a": 1, "budget": 0.5})[1] == pytest.approx(0.0)
+    assert sp.encode({"a": 1, "budget": 4.0})[1] == pytest.approx(1.0)
+    assert sp.encode({"a": 1, "budget": 2.25})[1] == pytest.approx(0.5)
+    r = random.Random(0)
+    for s in [sp.sample(r) for _ in range(20)]:
+        assert 0.5 <= s["budget"] <= 4.0
+    # neighbors perturb within range (clipped gaussian step)
+    for s in sp.neighbors({"a": 2, "budget": 3.9}, r, 16):
+        assert 0.5 <= s["budget"] <= 4.0
+    # stratified init covers the range ends approximately
+    strat = sp.stratified_samples(r, 5)
+    vals = sorted(s["budget"] for s in strat)
+    assert vals[0] == pytest.approx(0.5) and vals[-1] == pytest.approx(4.0)
+    # an uncountable space cannot be enumerated; BO falls back to sampling
+    assert sp.enumerate_all() is None
+    assert sp.size() == float("inf")
+
+
+def test_bo_learns_over_continuous_knob():
+    """The GP carries signal along the continuous dimension, and the
+    sampled-candidate path (no enumeration) produces in-range, finite-EI
+    suggestions."""
+    sp = _cont_space()
+    bo = LossAwareBO(sp, seed=0)
+
+    def true_Y(s):
+        return 1.0 + abs(s["budget"] - 3.5) + (4 - s["a"])
+
+    import random
+    r = random.Random(1)
+    for _ in range(40):
+        s = sp.sample(r)
+        bo.observe(s, loss=1.0, Y=true_Y(s))
+    # posterior orders the continuous axis correctly
+    assert bo.predicted_Y({"a": 4, "budget": 3.5}, 1.0) < \
+        bo.predicted_Y({"a": 4, "budget": 0.6}, 1.0)
+    assert bo.predicted_Y({"a": 4, "budget": 3.5}, 1.0) < \
+        bo.predicted_Y({"a": 1, "budget": 3.5}, 1.0)
+    sugg, ei, _ = bo.suggest(current_loss=1.0,
+                             current_setting={"a": 4, "budget": 3.0})
+    assert 0.5 <= sugg["budget"] <= 4.0
+    assert np.isfinite(ei) and ei >= 0
+
+
+def test_bo_forget_setting_drops_only_target():
+    sp = KnobSpace((Knob("a", "ordinal", (1, 2)),))
+    bo = LossAwareBO(sp, seed=0)
+    for i in range(4):
+        bo.observe({"a": 1}, loss=1.0, Y=10.0 + i)
+        bo.observe({"a": 2}, loss=1.0, Y=20.0 + i)
+    assert bo.forget_setting({"a": 1}) == 4
+    assert len(bo.y) == 4
+    assert all(s == {"a": 2} for s, _, _ in bo.records)
+    assert bo.forget_setting({"a": 1}) == 0       # idempotent

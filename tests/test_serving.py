@@ -136,8 +136,10 @@ def test_rejects_oversized_request(model):
                               prompt=np.zeros(30, np.int32), max_new=8))
 
 
-def test_unsupported_family_raises():
-    cfg = get_config("falcon-mamba-7b").reduced()
+def test_encoder_family_raises():
+    """Every decode-capable family is served through the StatePool
+    interface now; only encoder-only models (no decode step) are rejected."""
+    cfg = get_config("hubert-xlarge").reduced()
     with pytest.raises(NotImplementedError):
         ServingEngine({}, cfg, _setting())
 

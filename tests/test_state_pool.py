@@ -1,0 +1,258 @@
+"""StatePool invariants: block-table consistency across re-layouts,
+refcounted copy-on-write prefix sharing, recurrent-state survival across
+Type II executable swaps, and the engine-level no-token-loss guarantee
+under every reconfiguration kind."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.reconfig import plan
+from repro.models import lm
+from repro.serving import (DEFAULT_SERVING_SETTING, SERVING_RELAYOUT_KNOBS,
+                           PagedKVPool, Request, ServingEngine, SSMStatePool,
+                           serve_loop)
+from repro.serving.pool import TRASH_BLOCK
+
+
+@pytest.fixture(scope="module")
+def dense_model():
+    cfg = get_config("starcoder2-3b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def ssm_model():
+    cfg = get_config("falcon-mamba-7b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _setting(**kw):
+    return dict(DEFAULT_SERVING_SETTING, **kw)
+
+
+def _requests(cfg, lens, max_new=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (p,))
+                    .astype(np.int32),
+                    max_new=max_new, arrival_s=0.0)
+            for i, p in enumerate(lens)]
+
+
+def _reference_tokens(params, cfg, req, max_seq=48):
+    """Serve one request alone through a fresh default engine."""
+    eng = ServingEngine(params, cfg, _setting(), max_seq=max_seq)
+    serve_loop(eng, [Request(rid=0, prompt=req.prompt.copy(),
+                             max_new=req.max_new)])
+    return eng.finished[0].tokens_out
+
+
+def _check_tables(pool: PagedKVPool):
+    """Structural block-table invariants: live slots reference allocated
+    blocks; refcounts equal the number of table references (+cache pins are
+    refcount-0 entries); the trash block is never owned."""
+    counts = {}
+    for slot, live in enumerate(pool.slot_live):
+        blocks = pool.slot_blocks[slot]
+        if not live:
+            assert blocks == []
+            assert all(b == TRASH_BLOCK for b in pool.tables[slot])
+            continue
+        assert len(blocks) >= 1
+        for lb, b in enumerate(blocks):
+            assert b != TRASH_BLOCK
+            assert pool.tables[slot, lb] == b
+            counts[b] = counts.get(b, 0) + 1
+    for b, n in counts.items():
+        assert pool.ref[b] == n, f"block {b}: ref {pool.ref[b]} != {n} users"
+    # every cached (prefix) block exists and is not on the free list
+    for key, b in pool.prefix.items():
+        assert pool.block_key.get(b) == key
+        assert b not in pool._free
+
+
+# ---------------------------------------------------------------- paged pool
+
+def test_block_tables_consistent_after_relayouts(dense_model):
+    """Type I-b re-layouts (grow, re-block, shrink) keep table/refcount
+    structure valid and every request's output identical to an engine that
+    never reconfigured."""
+    cfg, params = dense_model
+    s = _setting(max_batch=2, block_size=8, prefix_share=True)
+    eng = ServingEngine(params, cfg, s, max_seq=48)
+    for r in _requests(cfg, [5, 12, 17, 9, 21, 7], max_new=8, seed=3):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert eng.n_active == 2
+    _check_tables(eng.pool)
+    for new in (_setting(max_batch=4, block_size=16, prefix_share=True),
+                _setting(max_batch=3, block_size=8, prefix_share=True)):
+        p = plan(eng.setting, new, mesh_knobs=SERVING_RELAYOUT_KNOBS)
+        assert "I-b" in p.kinds
+        eng.apply_plan(p)
+        _check_tables(eng.pool)
+        for _ in range(2):
+            eng.step()
+    while eng.has_work():
+        eng.step()
+    _check_tables(eng.pool)
+    assert len(eng.finished) == 6
+    for r in eng.finished:
+        assert len(r.tokens_out) == r.max_new            # no token lost
+        assert r.tokens_out == _reference_tokens(params, cfg, r), \
+            f"request {r.rid} diverged across relayouts"
+
+
+def test_prefix_sharing_refcount_and_cow(dense_model):
+    """Identical block-aligned prompts share refcounted blocks; the first
+    write into a shared block copies it (COW), and outputs match the
+    unshared reference exactly."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new=5) for i in range(3)]
+    s = _setting(max_batch=4, block_size=8, prefix_share=True)
+    eng = ServingEngine(params, cfg, s, max_seq=48)
+
+    # admit all three in one idle-engine tick: refcounts overlap while live
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    pool = eng.pool
+    assert pool.shared_blocks_hit >= 4          # 2 full blocks x 2 followers
+    assert pool.cow_copies >= 2                 # block-aligned full match
+    _check_tables(pool)
+    # the two prompt blocks of the first request are shared by later ones
+    shared_refs = [int(pool.ref[b]) for b in pool.slot_blocks[0][:2]]
+    assert any(r >= 2 for r in shared_refs)
+    while eng.has_work():
+        eng.step()
+    outs = [r.tokens_out for r in sorted(eng.finished, key=lambda r: r.rid)]
+    assert outs[0] == outs[1] == outs[2]
+    assert outs[0] == _reference_tokens(params, cfg, reqs[0])
+    # prefill savings: followers computed 1 token instead of 16
+    assert eng.prefill_tokens_computed < eng.prefill_tokens_total
+
+
+def test_prefix_cache_survives_release_and_relayout(dense_model):
+    """Blocks of a finished request stay cached (refcount 0, evictable) and
+    serve later identical prompts; a same-block-size re-layout migrates the
+    cache."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, (19,)).astype(np.int32)
+    s = _setting(max_batch=2, block_size=8, prefix_share=True)
+    eng = ServingEngine(params, cfg, s, max_seq=48)
+    serve_loop(eng, [Request(rid=0, prompt=prompt.copy(), max_new=4)])
+    assert eng.pool.evictable_blocks() >= 2     # 2 full blocks cached
+    # grow the pool: cached blocks migrate with the layout
+    eng.reconfigure(_setting(max_batch=4, block_size=8, prefix_share=True))
+    assert eng.pool.evictable_blocks() >= 2
+    hits0 = eng.pool.shared_blocks_hit
+    serve_loop(eng, [Request(rid=1, prompt=prompt.copy(), max_new=4)])
+    assert eng.pool.shared_blocks_hit > hits0   # cache hit after relayout
+
+
+def test_block_aware_admission_no_stranding(dense_model):
+    """Overcommitted pool (the paging memory win): blocks, not slots, are
+    the scarce resource.  A long prompt whose blocks don't fit must not
+    strand the free slot — the bounded lookahead admits a short request
+    behind it, and the long one completes later (no drop)."""
+    cfg, params = dense_model
+    # overcommit: 2 slots x 3 blocks/seq -> only 4 usable blocks
+    s = _setting(max_batch=2, block_size=16)
+    eng = ServingEngine(params, cfg, s, max_seq=48, block_overcommit=0.66)
+    assert eng.pool.free_blocks() == 4
+    long_a = _requests(cfg, [40], max_new=8, seed=5)[0]        # 3 blocks
+    long_b = _requests(cfg, [40], max_new=8, seed=6)[0]        # 3 blocks
+    long_b.rid = 1
+    shorts = _requests(cfg, [6, 6], max_new=4, seed=7)         # 1 block each
+    for i, r in enumerate(shorts):
+        r.rid = 10 + i
+    eng.submit(long_a)
+    eng.submit(long_b)
+    for r in shorts:
+        eng.submit(r)
+    eng.step()
+    # long_a took 3 blocks; long_b (3 more) can't fit the remaining 1 —
+    # but the free slot is NOT stranded: lookahead admits a 1-block short
+    assert eng.n_active == 2
+    in_flight = [r for r in eng.slot_req if r is not None]
+    assert long_a in in_flight
+    assert any(r.rid >= 10 for r in in_flight)
+    while eng.has_work():
+        eng.step()
+    assert len(eng.finished) == 4
+    for r in eng.finished:
+        assert len(r.tokens_out) == r.max_new             # nothing dropped
+    # a short finished before the blocked long_b (it was admitted past it)
+    order = [r.rid for r in eng.finished]
+    assert min(order.index(10), order.index(11)) < order.index(1)
+
+
+# ------------------------------------------------------------------ ssm pool
+
+def test_ssm_pool_survives_type2_swap(ssm_model):
+    """Recurrent state (conv window + SSM state) is untouched by a Type II
+    executable swap mid-generation: outputs match the never-reconfigured
+    reference."""
+    cfg, params = ssm_model
+    s = _setting(max_batch=2)
+    eng = ServingEngine(params, cfg, s, max_seq=48)
+    assert isinstance(eng.pool, SSMStatePool)
+    reqs = _requests(cfg, [9, 14], max_new=8, seed=7)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    assert eng.n_active == 2
+    p = plan(eng.setting, _setting(max_batch=2, k_chunk=256,
+                                   admit_budget=2.0),
+             mesh_knobs=SERVING_RELAYOUT_KNOBS)
+    assert p.kinds == ("II",)
+    eng.apply_plan(p)
+    while eng.has_work():
+        eng.step()
+    for r in eng.finished:
+        assert r.tokens_out == _reference_tokens(params, cfg, r), \
+            f"request {r.rid} diverged across the II swap"
+
+
+def test_ssm_pool_relayout_preserves_state(ssm_model):
+    """Type I-b slot relocation (grow then shrink) keeps every in-flight
+    ssm request's state: outputs match the unreconfigured reference."""
+    cfg, params = ssm_model
+    eng = ServingEngine(params, cfg, _setting(max_batch=2), max_seq=48)
+    reqs = _requests(cfg, [9, 14, 5, 11], max_new=8, seed=8)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    eng.apply_plan(plan(eng.setting, _setting(max_batch=4),
+                        mesh_knobs=SERVING_RELAYOUT_KNOBS))
+    for _ in range(2):
+        eng.step()
+    eng.apply_plan(plan(eng.setting, _setting(max_batch=2),
+                        mesh_knobs=SERVING_RELAYOUT_KNOBS))
+    while eng.has_work():
+        eng.step()
+    assert len(eng.finished) == 4
+    for r in eng.finished:
+        assert len(r.tokens_out) == r.max_new
+        assert r.tokens_out == _reference_tokens(params, cfg, r), \
+            f"request {r.rid} diverged across ssm relayouts"
+
+
+def test_hybrid_family_served(dense_model):
+    """The hybrid family (mamba2 + shared attention) runs through the same
+    pool interface — no family gate, no fallback."""
+    cfg = get_config("zamba2-1.2b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, _setting(max_batch=2), max_seq=48)
+    stats = serve_loop(eng, _requests(cfg, [5, 9, 13], max_new=4, seed=9))
+    assert stats["completed"] == 3
+    assert all(len(r.tokens_out) == r.max_new for r in eng.finished)

@@ -161,6 +161,87 @@ def test_property_outlier_removal(losses, spike):
         assert spike * max(losses) not in lo2
 
 
+class _TimeObjective:
+    """Serving-like objective: Y is proportional to the window's mean
+    iteration time (never converges) — the regime drift detection targets."""
+
+    def window_score(self, iters, values, times):
+        t = float(np.mean(times))
+        return {"Y": t * 1000, "t_bar": t, "remaining_iters": 1000}
+
+    peek = window_score
+
+    def is_converged(self, repo):
+        return False
+
+
+def test_drift_detection_triggers_retune():
+    """MLtuner-style load-drift re-search: when the incumbent's observed
+    objective degrades far beyond its EWMA, the tuner drops the incumbent's
+    stale observations and re-explores to the new optimum."""
+    space = KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),))
+    tuner = TuningManager(space, {"a": 1},
+                          TunerConfig(eps=1e-9, a=5, b=4, seed=0,
+                                      ei_rel_threshold=0.0, drift_z=3.0),
+                          objective=_TimeObjective())
+    rng = np.random.default_rng(0)
+    for it in range(900):
+        s = tuner.current
+        t = 0.1 / s["a"]                       # a=8 fastest...
+        if it > 450 and s["a"] == 8:
+            t *= 6.0                           # ...until the workload shifts
+        tuner.record_iteration(1.0, t * (1 + 0.02 * rng.standard_normal()))
+        plan = tuner.maybe_advance()
+        if plan is not None:
+            tuner.record_reconfig(plan, 0.01)
+    assert tuner.drift_events, "degradation went undetected"
+    ev = tuner.drift_events[0]
+    assert ev["setting"] == {"a": 8}           # the stale incumbent
+    assert ev["z"] > 3.0 and ev["dropped_obs"] > 0
+    # after the re-search the tuner abandoned the degraded optimum
+    assert tuner.current["a"] != 8
+    assert 0.1 / tuner.current["a"] < 0.6      # better than degraded a=8
+
+
+def test_window_time_budget_closes_heavy_windows():
+    """With window_time_s set, expensive iterations close a window early
+    (serving quanta vary ~100x with prompt length); cheap iterations keep
+    the iteration-count boundary."""
+    space = KnobSpace((Knob("a", "ordinal", (1, 2)),))
+
+    def run(t_iter):
+        tuner = TuningManager(space, {"a": 1},
+                              TunerConfig(eps=1e-9, a=50, b=2, seed=0,
+                                          window_time_s=0.5),
+                              objective=_TimeObjective())
+        its = 0
+        while len(tuner.repo.windows_list) < 2 and its < 200:
+            tuner.record_iteration(1.0, t_iter)
+            its += 1
+            tuner.maybe_advance()
+        return its
+
+    assert run(0.3) == 2        # 2 heavy iters hit the 0.5s budget
+    assert run(0.001) == 50     # cheap iters run the full a=50 window
+
+
+def test_drift_detector_ignores_steady_noise():
+    """Ordinary noise must not trip the z-test (no spurious forgetting)."""
+    space = KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),))
+    tuner = TuningManager(space, {"a": 8},
+                          TunerConfig(eps=1e-9, a=5, b=2, seed=0,
+                                      drift_z=3.0),
+                          objective=_TimeObjective())
+    rng = np.random.default_rng(1)
+    for _ in range(600):
+        t = (0.1 / tuner.current["a"]) * (1 + 0.05 * rng.standard_normal())
+        tuner.record_iteration(1.0, t)
+        plan = tuner.maybe_advance()
+        if plan is not None:
+            tuner.record_reconfig(plan, 0.01)
+    assert not tuner.drift_events
+
+
 def test_selftuning_loop_on_logr():
     """Full-stack: real jitted workload + tuner + reconfig execution."""
     import jax.numpy as jnp
