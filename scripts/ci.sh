@@ -6,6 +6,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== docs sync (knob table vs registrations) =="
+python -m pytest -x -q tests/test_docs.py
+
+echo "== paged-attention kernel parity =="
+python -m pytest -x -q tests/test_paged_attention.py
+
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
 

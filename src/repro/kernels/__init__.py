@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 flash_attention — causal-block-skipping online-softmax attention (GQA-aware)
+paged_attention — vLLM-style decode attention over the serving engine's
+                  paged KV pool: scalar-prefetched block tables pick the
+                  physical block per grid step, online softmax across
+                  blocks, tail masking, future-block skip
 mamba_scan      — VMEM-resident chunked selective scan (mamba1 recurrence)
 quant           — blockwise int8 stochastic-rounding (de)quantization
 

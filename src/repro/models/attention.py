@@ -87,6 +87,50 @@ def chunked_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, *, pos):
+    """Attention of S query tokens over a *paged* KV cache, block at a time.
+
+    q: (B, S, H, hd); k_pool, v_pool: (NB, bs, K, hd) physical blocks;
+    block_tables: (B, MB) physical block per logical block; pos: (B,)
+    logical position of the first query token (query j sits at pos + j,
+    so S=1 is single-token decode and S>1 is multi-token chunked decode,
+    e.g. suffix prefill against shared prefix blocks).
+
+    The caller passes only the *visible* prefix of the block table: the
+    serving engine tracks every slot's write position on the host and
+    compiles the decode step per context bucket (the same shape-bucketing
+    it already applies to prefill), so a short batch attends over 2 table
+    columns instead of all MB — the paged-attention savings with zero
+    runtime control flow.  On TPU this dispatches to the Pallas kernel in
+    kernels/paged_attention (grid over requests x KV blocks, online
+    softmax streamed across blocks in VMEM — no dense gather at all); the
+    CPU fallback gathers the visible blocks and runs one fused masked
+    attention over them (numerics identical to the full-width gather
+    path: masked tails contribute exp(-inf) = 0).
+    """
+    if jax.default_backend() == "tpu":
+        from repro.kernels.paged_attention import paged_attention_op
+        return paged_attention_op(q, k_pool, v_pool, block_tables, pos)
+
+    B, S, H, hd = q.shape
+    NB, bs, K, _ = k_pool.shape
+    w = block_tables.shape[1]                # visible table columns
+    scale = hd ** -0.5
+    qf = q.astype(jnp.bfloat16)
+    q_pos = pos[:, None] + jnp.arange(S)[None, :]           # (B, S)
+    kb = _repeat_kv(k_pool[block_tables].reshape(B, w * bs, K, hd), H)
+    vb = _repeat_kv(v_pool[block_tables].reshape(B, w * bs, K, hd), H)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb,
+                   preferred_element_type=jnp.float32) * scale
+    kvp = jnp.arange(w * bs)
+    mask = kvp[None, None, None, :] <= q_pos[:, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vb.dtype), vb,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B,S,H,hd)
+
+
 def decode_attention(q, k_cache, v_cache, *, pos):
     """Attention of S query tokens over a KV cache.
 

@@ -20,7 +20,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import MeshSpec, constrain, path_str
 from repro.models import common
-from repro.models.attention import chunked_attention, decode_attention
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    paged_decode_attention)
 from repro.models.mamba import mamba1_block, mamba2_block
 from repro.models.moe import moe_block
 
@@ -44,6 +45,18 @@ class ModelKnobs:
                                # sharded over the model axis (16x less HBM for
                                # remat-saved activations; adds per-layer
                                # reshard collectives)
+    attn_impl: str = "paged"   # paged-decode attention: "paged" reads KV
+                               # blocks in place through the block table
+                               # (kernels/paged_attention schedule; the pool's
+                               # block_size knob is the kernel kv tile);
+                               # "gather" is the pre-kernel path — gather the
+                               # table into a dense cache, then full-softmax
+                               # attention (kept for the bench ablation)
+    attn_ctx: int = 0          # paged decode: visible block-table columns
+                               # (0 = all).  The serving engine tracks write
+                               # positions on the host and compiles per
+                               # context bucket, so short batches only read
+                               # (and pay for) their live blocks
 
 
 def _pdt(cfg: ModelConfig):
@@ -212,12 +225,24 @@ def _attn_apply(x, p, cfg: ModelConfig, ms, knobs: ModelKnobs, positions,
         MB = block_tables.shape[1]
         blk = jnp.take_along_axis(block_tables,
                                   jnp.minimum(positions // bs, MB - 1), axis=1)
+        # positions past the table (bucket padding in chunked prefill) must
+        # not clamp onto the last live column — their (block, offset) rows
+        # would collide with real suffix KV.  Physical block 0 is the
+        # pool's reserved trash block (serving.pool.TRASH_BLOCK), so they
+        # land there and are never read.
+        blk = jnp.where(positions >= MB * bs, 0, blk)
         off = positions % bs                                # (B, S)
         k_cache = k_cache.at[blk, off].set(k.astype(k_cache.dtype))
         v_cache = v_cache.at[blk, off].set(v.astype(v_cache.dtype))
-        kg = k_cache[block_tables].reshape(B, MB * bs, K, hd)
-        vg = v_cache[block_tables].reshape(B, MB * bs, K, hd)
-        out = decode_attention(q, kg, vg, pos=pos)
+        if knobs.attn_impl == "gather":     # pre-kernel path (ablation arm)
+            kg = k_cache[block_tables].reshape(B, MB * bs, K, hd)
+            vg = v_cache[block_tables].reshape(B, MB * bs, K, hd)
+            out = decode_attention(q, kg, vg, pos=pos)
+        else:                               # read blocks in place (kernel)
+            bt_vis = (block_tables[:, :knobs.attn_ctx] if knobs.attn_ctx
+                      else block_tables)    # host-chosen context bucket
+            out = paged_decode_attention(q, k_cache, v_cache, bt_vis,
+                                         pos=pos)
         new_kv = (k_cache, v_cache)
     else:                                   # decode: dense (B, Smax, K, hd)
         k_cache, v_cache = cache

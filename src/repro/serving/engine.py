@@ -15,8 +15,11 @@ Architecture (the serving half of the paper's Fig. 3):
   * interleaved prefill/decode: prefill runs per request at batch 1, padded
     to a multiple of ``prefill_chunk`` (bounds the number of prefill
     executables); a prompt whose prefix is already cached only computes its
-    suffix (chunked prefill against the shared blocks); decode advances
-    *all* live slots one token per quantum through the pool's indirection;
+    suffix (one multi-token paged decode step against the shared blocks);
+    decode advances *all* live slots one token per quantum through the
+    pool's indirection — paged attention reads KV blocks in place through
+    the block table (kernels/paged_attention on TPU; context-bucketed
+    executables on CPU, so short batches never touch dead tail blocks);
   * online reconfiguration: Type II = swap the AOT-compiled decode/prefill
     executables (bounded LRU, shared policy with the training loop); Type
     I-b = ODMR-style pool re-layout — allocate the pool for the new
@@ -44,7 +47,7 @@ from repro.models import lm
 from repro.models.lm import ModelKnobs
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
                                  SERVING_RELAYOUT_KNOBS)
-from repro.serving.pool import make_state_pool, pool_dtype
+from repro.serving.pool import make_state_pool
 
 
 @dataclass
@@ -76,7 +79,8 @@ class ServingEngine:
 
     def __init__(self, params, cfg, setting: dict | None = None, *,
                  max_seq: int = 96, ms=None, step_cache_size: int = 24,
-                 block_overcommit: float = 1.0):
+                 block_overcommit: float | None = None,
+                 attn_impl: str = "paged"):
         if cfg.family not in self.SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"serving engine supports {self.SUPPORTED_FAMILIES}; "
@@ -86,16 +90,20 @@ class ServingEngine:
         self.cfg = cfg
         self.ms = ms
         self.max_seq = max_seq
-        self.block_overcommit = block_overcommit
+        # paged decode implementation: "paged" reads KV blocks through the
+        # block table (kernels/paged_attention; context-bucketed on CPU),
+        # "gather" is the pre-kernel dense-gather path (bench ablation arm)
+        self.attn_impl = attn_impl
         self.setting = dict(DEFAULT_SERVING_SETTING)
         self.setting.update(setting or {})
+        if block_overcommit is not None:    # explicit override of the knob
+            self.setting["block_overcommit"] = block_overcommit
         # compiled executables, bounded-LRU (same policy as the trainer):
-        # decode per pool layout, prefill per (bucket, k_chunk), chunked
-        # shared-prefix prefill per (bucket, cache_dtype)
+        # decode per (pool layout, context bucket), prefill per (bucket,
+        # k_chunk), chunked shared-prefix prefill per (bucket, pool layout)
         self._steps = LRUCache(step_cache_size)
         self.queue: deque[Request] = deque()
-        self.pool = make_state_pool(cfg, self.setting, max_seq, ms,
-                                    overcommit=block_overcommit)
+        self.pool = make_state_pool(cfg, self.setting, max_seq, ms)
         self._reset_slots()
         self.clock = 0.0              # driver-supplied wall time
         self._admit_acc = 0.0         # fractional admit_budget carry
@@ -106,6 +114,8 @@ class ServingEngine:
         self.ticks = 0
         self.prefill_tokens_computed = 0   # tokens actually prefilled
         self.prefill_tokens_total = 0      # tokens the prompts contained
+        self.decode_time_s = 0.0           # wall time inside decode execs
+        self.decode_tokens = 0             # tokens those execs produced
 
     def _reset_slots(self):
         n = self.pool.n_slots
@@ -146,15 +156,41 @@ class ServingEngine:
         self.submitted.append(req.rid)
 
     # ----------------------------------------------------- compiled steps
-    def _decode_exec(self):
-        key = ("decode",) + self.pool.exec_key()
+    def _ctx_buckets(self) -> tuple:
+        """Context buckets for the paged decode step: numbers of visible
+        block-table columns the decode executable is specialized on (the
+        same shape-bucketing the engine applies to prefill lengths).  The
+        engine knows every slot's write position on the host, so each tick
+        runs the smallest executable whose bucket covers the batch — the
+        paged-attention kernel's only-live-blocks property with zero
+        runtime control flow.  At most 6 buckets per pool geometry bounds
+        the executable count; 0 = full table (ssm pools, gather path)."""
+        if self.pool.kind != "paged" or self.attn_impl == "gather":
+            return (0,)
+        mb = self.pool.mb
+        g = -(-mb // 6)
+        return tuple(sorted({min(t * g, mb) for t in range(1, 7)}))
+
+    def _ctx_cols(self, last_pos: int) -> int:
+        """Smallest context bucket covering logical position ``last_pos``.
+        Submit-time validation keeps decode positions below max_seq - 1,
+        so the full table always covers; the clamp is defense in depth."""
+        buckets = self._ctx_buckets()
+        if buckets == (0,):
+            return 0
+        need = min(last_pos // self.pool.bs + 1, self.pool.mb)
+        return next(c for c in buckets if c >= need)
+
+    def _decode_exec(self, ctx_cols: int = 0):
+        key = ("decode", self.attn_impl, ctx_cols) + self.pool.exec_key()
 
         def build():
             cfg, ms = self.cfg, self.ms
+            kn = ModelKnobs(attn_impl=self.attn_impl, attn_ctx=ctx_cols)
 
             def f(params, cache, tok, pos):
                 logits, new_cache = lm.decode_step(params, cache, tok, pos,
-                                                   cfg, ms)
+                                                   cfg, ms, kn)
                 # pin state dtypes to the pool's (ssm conv windows come back
                 # in compute dtype) so the AOT signature is a fixed point
                 new_cache = jax.tree_util.tree_map(
@@ -194,33 +230,39 @@ class ServingEngine:
         return self._steps.get_or_create(key, build)
 
     def _chunk_prefill_exec(self, bucket: int):
-        """Chunked prefill against a prior cache: the suffix of a prompt
-        whose prefix is shared attends to the gathered prior KV and writes
-        its own KV in one multi-token decode step."""
-        key = ("chunkpf", bucket, self.setting["cache_dtype"])
+        """Chunked prefill against shared prefix blocks: the suffix of a
+        prompt whose prefix is shared runs one multi-token paged decode
+        step — queries attend the prior blocks *through the block table*
+        (models.attention.paged_decode_attention; the Pallas kernel's
+        multi-token form on TPU) and write their own KV straight into the
+        slot's blocks.  No dense prior is materialized; COW for shared
+        blocks in the write range is resolved by the caller *before* the
+        step runs."""
+        key = ("chunkpf", bucket, self.attn_impl) + self.pool.exec_key()
 
         def build():
             cfg, ms = self.cfg, self.ms
+            kn = ModelKnobs(attn_impl=self.attn_impl)
 
-            def f(params, prior, tokens, start, last_idx):
+            def f(params, cache, tokens, start, last_idx):
                 # project only the last real suffix position to logits —
                 # a full (bucket, vocab) projection would cost bucket x
                 # the FLOPs for one usable row (same trick as _prefill_exec)
                 hidden, _, new_cache = lm.forward(
-                    params, {"tokens": tokens}, cfg, ms, mode="decode",
-                    cache=prior, pos=start)
+                    params, {"tokens": tokens}, cfg, ms, kn, mode="decode",
+                    cache=cache, pos=start)
                 last = jax.lax.dynamic_slice_in_dim(hidden, last_idx, 1,
                                                     axis=1)
                 return lm.logits_fn(params, last, cfg, ms)[:, 0], new_cache
 
-            L, K, hd = self.cfg.n_layers, self.cfg.n_kv_heads, self.cfg.hd
-            dt = pool_dtype(self.setting)
-            prior = {k: jax.ShapeDtypeStruct((L, 1, self.max_seq, K, hd), dt)
-                     for k in ("k", "v")}
+            pool_kv = self.pool.decode_cache()
+            cache = {"k": pool_kv["k"], "v": pool_kv["v"],
+                     "block_tables":
+                         jax.ShapeDtypeStruct((1, self.pool.mb), jnp.int32)}
             tk = jax.ShapeDtypeStruct((1, bucket), jnp.int32)
             st = jax.ShapeDtypeStruct((1,), jnp.int32)
             ix = jax.ShapeDtypeStruct((), jnp.int32)
-            return aot_compile(f, self.params, prior, tk, st, ix)
+            return aot_compile(f, self.params, cache, tk, st, ix)
 
         return self._steps.get_or_create(key, build)
 
@@ -256,37 +298,49 @@ class ServingEngine:
         slot, shared = res
         P = len(req.prompt)
         if shared > 0:
-            # shared-prefix fast path: prefill only the suffix, chunked
-            # against the prior (shared) blocks; COW covers the case where
-            # the whole prompt matched and the last token re-lands in a
-            # shared block
+            # shared-prefix fast path: prefill only the suffix as one
+            # multi-token *paged* decode step — queries attend the shared
+            # blocks through the block table and write their own KV in
+            # place.  COW runs first: it covers in-range writes into
+            # shared blocks, including the case where the whole prompt
+            # matched and the last token re-lands in a shared block.
+            # (Bucket-pad positions write into the slot's reserved/trash
+            # blocks; decode re-writes them before any query can see them.)
             sfx = req.prompt[shared:]
             n = len(sfx)
             bucket = self._bucket(n)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :n] = sfx
-            prior = self.pool.gather_dense(slot)
+            self.pool.prepare_write(slot, shared, P)
+            pool_kv = self.pool.decode_cache()
+            cache = {"k": pool_kv["k"], "v": pool_kv["v"],
+                     "block_tables": jnp.asarray(
+                         self.pool.tables[slot:slot + 1], jnp.int32)}
             logits, newc = self._chunk_prefill_exec(bucket)(
-                self.params, prior, jnp.asarray(padded),
+                self.params, cache, jnp.asarray(padded),
                 jnp.asarray([shared], jnp.int32),
                 jnp.asarray(n - 1, jnp.int32))
-            # quantize at bucket granularity (blockwise per-position, so
-            # quant-then-slice == slice-then-quant) to hit the warmed
-            # ("quant", bucket) executables instead of per-length compiles;
-            # when the cache boundary truncates the slice, zero-pad back to
-            # the bucket — padded positions form their own quant blocks and
-            # are discarded, never a cold mid-admission compile
-            m = min(bucket, self.max_seq - shared)
-            kv = {k: newc[k][:, 0, shared:shared + m] for k in ("k", "v")}
+            self.pool.set_cache(newc)
             if self.setting["quant"] == "int8":
+                # re-quantize the freshly written suffix rows in place, at
+                # bucket granularity (blockwise per-position quant, so
+                # quant-then-slice == slice-then-quant) to hit the warmed
+                # ("quant", bucket) executables instead of per-length
+                # compiles; rows past the cache boundary are zero-padded
+                # back to the bucket — pad positions form their own quant
+                # blocks and are discarded by the bounded write below
+                m = min(bucket, self.max_seq - shared)
+                pos = np.arange(shared, shared + m)
+                blk = jnp.asarray(self.pool.tables[slot, pos // self.pool.bs])
+                off = jnp.asarray(pos % self.pool.bs)
+                kv = {k: self.pool.kv[k][:, blk, off] for k in ("k", "v")}
                 if m < bucket:
                     kv = {k: jnp.pad(v, ((0, 0), (0, bucket - m),
                                          (0, 0), (0, 0)))
                           for k, v in kv.items()}
                 kv = {k: self._quant_exec(bucket)(v) for k, v in kv.items()}
-            self.pool.prepare_write(slot, shared, P)
-            self.pool.write_kv(slot, {k: v[:, :n] for k, v in kv.items()},
-                               start=shared)
+                self.pool.write_kv(slot, {k: v[:, :n] for k, v in kv.items()},
+                                   start=shared)
             tok = int(jnp.argmax(logits[0]))
             self.prefill_tokens_computed += n
         else:
@@ -323,7 +377,8 @@ class ServingEngine:
         req.done_s = self.clock
         self.finished.append(req)
         self.slot_req[slot] = None
-        self.pool.release(slot)
+        self.slot_pos[slot] = 0       # stale positions must not inflate the
+        self.pool.release(slot)       # next tick's decode context bucket
 
     # ---------------------------------------------------------------- tick
     def step(self, now: float | None = None) -> dict:
@@ -360,14 +415,22 @@ class ServingEngine:
             tokens += 1
             budget -= 1
 
-        # decode: advance every live slot by one token
+        # decode: advance every live slot by one token.  The executable is
+        # picked per context bucket: the batch's highest write position
+        # (host state) decides how many block-table columns the paged
+        # attention reads — short batches never touch dead tail blocks
         if self.n_active > 0:
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
             self.pool.prepare_step_writes(active, self.slot_pos)
             tok = jnp.asarray(self.slot_tok[:, None])
             pos = jnp.asarray(self.slot_pos)
-            logits, new_cache = self._decode_exec()(
+            cols = self._ctx_cols(int(self.slot_pos[active].max()))
+            t_dec = time.perf_counter()
+            logits, new_cache = self._decode_exec(cols)(
                 self.params, self.pool.decode_cache(), tok, pos)
+            jax.block_until_ready(logits)
+            self.decode_time_s += time.perf_counter() - t_dec
+            self.decode_tokens += len(active)
             self.pool.set_cache(new_cache)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
             for slot, req in enumerate(self.slot_req):
@@ -424,9 +487,12 @@ class ServingEngine:
         kcs = values.get("k_chunk", (save_setting["k_chunk"],))
         share = paged and any(values.get("prefix_share", (False,)))
         # everything warmed must fit, or we would evict what we just built
-        planned = (len(mbs) * len(cds) * len(bss)
+        # (decode is warmed per context bucket, <= 6 per pool geometry;
+        # shared-prefix chunk prefill per (pool geometry, length bucket))
+        geoms = len(mbs) * len(cds) * len(bss)
+        planned = (geoms * 6
                    + len(kcs) * len(buckets)
-                   + (len(cds) * len(buckets) if share else 0)
+                   + (geoms * len(buckets) if share else 0)
                    + (len(buckets) if "int8" in values.get("quant", ())
                       else 0))
         self._steps.capacity = max(self._steps.capacity, planned + 2)
@@ -437,24 +503,22 @@ class ServingEngine:
                     if bsz is not None:
                         self.setting["block_size"] = bsz
                     self.pool = make_state_pool(
-                        self.cfg, self.setting, self.max_seq, self.ms,
-                        overcommit=self.block_overcommit)
-                    self._decode_exec()
+                        self.cfg, self.setting, self.max_seq, self.ms)
+                    for cols in self._ctx_buckets():
+                        self._decode_exec(cols)
+                    if share:
+                        for b in buckets:
+                            self._chunk_prefill_exec(b)
         for kc in kcs:
             self.setting["k_chunk"] = kc
             for b in buckets:
                 self._prefill_exec(b)
-        if share:
-            for cd in cds:
-                self.setting["cache_dtype"] = cd
-                for b in buckets:
-                    self._chunk_prefill_exec(b)
         if "int8" in values.get("quant", ()):
             for b in buckets:
                 self._quant_exec(b)
         self.setting = save_setting
         self.pool = make_state_pool(self.cfg, self.setting, self.max_seq,
-                                    self.ms, overcommit=self.block_overcommit)
+                                    self.ms)
         self._reset_slots()
 
     def reconfigure(self, new_setting: dict) -> float:
@@ -485,11 +549,23 @@ class ServingEngine:
         if "I-b" in kinds:
             self._relayout_pool()
         else:
-            self.pool.setting = dict(self.setting)   # policy knobs
-        # warm the hot-path executable for the new setting (SSR)
-        self._decode_exec()
+            self.pool.update_policy(self.setting)    # policy knobs
+        # warm the hot-path executables for the new setting (SSR): every
+        # context bucket, so no decode tick pays a cold compile
+        for cols in self._ctx_buckets():
+            self._decode_exec(cols)
         jax.block_until_ready(self.pool.decode_cache())
         return time.perf_counter() - t0
+
+    def set_attn_impl(self, impl: str):
+        """Switch the paged-attention implementation ("paged" | "gather").
+        Executables are keyed on it, so this is a plain Type II swap; the
+        bench ablation uses it to A/B the kernel path against the
+        pre-kernel dense-gather path on identical traffic."""
+        assert impl in ("paged", "gather"), impl
+        self.attn_impl = impl
+        for cols in self._ctx_buckets():     # warm before the next tick
+            self._decode_exec(cols)
 
     def _relayout_pool(self):
         live_extents = {}
@@ -523,6 +599,8 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
     fin0 = len(engine.finished)
     pf0 = engine.prefill_tokens_computed
     pt0 = engine.prefill_tokens_total
+    dt0 = engine.decode_time_s
+    dk0 = engine.decode_tokens
     sh0 = engine.pool.shared_blocks_hit
     cow0 = engine.pool.cow_copies
     t_start = time.perf_counter()
@@ -586,5 +664,11 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         "prefill_tokens_total": engine.prefill_tokens_total - pt0,
         "shared_blocks_hit": engine.pool.shared_blocks_hit - sh0,
         "cow_copies": engine.pool.cow_copies - cow0,
+        # decode-only throughput: wall time spent inside the compiled
+        # decode steps vs tokens they produced (isolates the paged-
+        # attention hot path from prefill/admission/queueing)
+        "decode_s": engine.decode_time_s - dt0,
+        "decode_tok_per_s": ((engine.decode_tokens - dk0)
+                             / max(engine.decode_time_s - dt0, 1e-9)),
     }
     return stats

@@ -15,11 +15,19 @@ Knob classes for reconfiguration planning (repro.core.reconfig):
   * everything else only swaps the compiled step or the admission policy —
     Type II (SSR).
 
-``admit_budget`` is the continuous knob (prefills admitted per scheduling
+``admit_budget`` is a continuous knob (prefills admitted per scheduling
 quantum while decodes run, fractional values accumulate): the ROADMAP's
-"continuous-valued knobs" item.  ``prefix_share`` gates copy-on-write
-prompt-prefix sharing in the paged pool.  SSM/hybrid families have no KV
-sequence axis, so their space drops the paging and quantization knobs.
+"continuous-valued knobs" item.  ``block_overcommit`` is the second
+continuous knob: the usable-block budget as a fraction of the dense
+worst case (max_batch full sequences).  Below 1.0 admission genuinely
+contends on blocks — the paging win — at the risk of admission stalls
+and prefix-cache evictions.  The pool arrays stay shaped for the worst
+case, so a budget move is a free-list rebalance (Type II policy swap):
+the BO can perturb a continuous knob without ever forcing a pool
+re-layout or a decode-executable recompile.  ``prefix_share`` gates
+copy-on-write prompt-prefix sharing in the paged pool.  SSM/hybrid
+families have no KV sequence axis, so their space drops the paging and
+quantization knobs.
 """
 from __future__ import annotations
 
@@ -54,6 +62,7 @@ def serving_knob_space(max_batch_ceiling: int = 8,
             Knob("quant", "nominal", ("none", "int8")),
             Knob("block_size", "ordinal", (8, 16)),
             Knob("prefix_share", "bool", (False, True)),
+            Knob("block_overcommit", "continuous", (0.5, 1.0)),
         ]
     return KnobSpace(tuple(knobs))
 
@@ -69,4 +78,5 @@ DEFAULT_SERVING_SETTING = {
     "block_size": 16,
     "prefix_share": False,
     "admit_budget": 1.0,
+    "block_overcommit": 1.0,
 }

@@ -70,7 +70,14 @@ class StatePool:
     cache_evictions = 0
 
     def reset_prefix_cache(self):
-        pass                               # only the paged pool has one
+        """Forget cached (refcount-0) shared state so one benchmark arm's
+        prefills can never serve another's admissions.  Only the paged
+        pool has a prefix cache; the default is a no-op."""
+
+    def update_policy(self, setting: dict):
+        """Adopt Type II policy knobs (no state relocation).  The paged
+        pool additionally rebalances its overcommit block budget."""
+        self.setting = dict(setting)
 
 
 class PagedKVPool(StatePool):
@@ -79,29 +86,43 @@ class PagedKVPool(StatePool):
     kind = "paged"
 
     def __init__(self, cfg, setting: dict, max_seq: int, ms=None,
-                 n_slots: int | None = None, overcommit: float = 1.0):
+                 n_slots: int | None = None, overcommit: float | None = None):
         assert cfg.family in ("dense", "moe", "vlm"), cfg.family
         self.cfg = cfg
         self.ms = ms
         self.max_seq = max_seq
         self.setting = dict(setting)
-        # overcommit < 1 under-provisions blocks relative to the dense
-        # worst case (n_slots full sequences) — the paging memory win.
-        # Admission then genuinely contends on blocks, not just slots.
-        self.overcommit = overcommit
+        # overcommit < 1 limits usable blocks relative to the dense worst
+        # case (n_slots full sequences) — admission then genuinely
+        # contends on blocks, not just slots.  It is the *tuned*
+        # continuous knob setting["block_overcommit"]; an explicit
+        # constructor value overrides the setting.  The pool arrays are
+        # always shaped for the worst case, so the knob only moves blocks
+        # between the free list and a reserved set: a Type II policy swap
+        # — no re-layout, and the decode executable's cache shape (a
+        # function of max_batch x block_size only) never recompiles when
+        # the BO perturbs the knob.
+        if overcommit is not None:
+            self.setting["block_overcommit"] = overcommit
         # counters (benchmarks report these)
         self.shared_blocks_hit = 0
         self.cow_copies = 0
         self.cache_evictions = 0
         self._alloc(n_slots or setting["max_batch"])
 
+    @property
+    def overcommit(self) -> float:
+        return float(self.setting.get("block_overcommit", 1.0))
+
     # ------------------------------------------------------------ allocation
     def _alloc(self, n_slots: int, min_blocks: int = 0):
         self.n_slots = n_slots
         self.bs = int(self.setting["block_size"])
         self.mb = -(-self.max_seq // self.bs)           # table width
-        usable = int(np.ceil(n_slots * self.mb * self.overcommit))
-        self.nb = max(usable, self.mb, min_blocks) + 1  # +1: trash block
+        worst = n_slots * self.mb                       # dense worst case
+        self.nb = max(worst, self.mb, min_blocks) + 1   # +1: trash block
+        # live data must fit even under a tight overcommit budget
+        self._budget_floor = min_blocks
         dt = pool_dtype(self.setting)
         shapes = lm.init_paged_cache_shapes(self.cfg, self.nb, self.bs)
         self.kv = {k: jnp.zeros(s.shape, dt) for k, s in shapes.items()}
@@ -110,13 +131,38 @@ class PagedKVPool(StatePool):
         self.tables = np.zeros((n_slots, self.mb), np.int32)
         self.slot_blocks: list[list[int]] = [[] for _ in range(n_slots)]
         self.slot_live = [False] * n_slots
-        self._free = set(range(1, self.nb))
+        self._free: set[int] = set()
+        self._reserved = set(range(1, self.nb))         # beyond the budget
         # prefix cache: chain key <-> cached physical block (refcount may be
         # 0 — then the block is evictable, LRU by touch order)
         self.prefix: dict[int, int] = {}
         self.block_key: dict[int, int] = {}
         self._touch: dict[int, int] = {}
         self._tick = 0
+        self._rebalance_budget()
+
+    def usable_blocks(self) -> int:
+        """The overcommit budget: blocks admission may hold at once."""
+        target = int(np.ceil(self.n_slots * self.mb * self.overcommit))
+        return min(self.nb - 1, max(target, self._budget_floor))
+
+    def _rebalance_budget(self):
+        """Move blocks between the free list and the reserved set so that
+        held (allocated + prefix-cached) + free == the overcommit budget.
+        When live requests hold more than a newly shrunk budget, the free
+        list drains and releases refill the reserved set instead."""
+        target = self.usable_blocks()
+        held = (self.nb - 1) - len(self._free) - len(self._reserved)
+        while held + len(self._free) < target and self._reserved:
+            self._free.add(self._reserved.pop())
+        while held + len(self._free) > target and self._free:
+            self._reserved.add(self._free.pop())
+
+    def update_policy(self, setting: dict):
+        """Adopt policy-only (Type II) knob changes: ``prefix_share`` /
+        ``block_overcommit`` take effect immediately, no re-layout."""
+        self.setting = dict(setting)
+        self._rebalance_budget()
 
     @property
     def n_active(self) -> int:
@@ -159,12 +205,14 @@ class PagedKVPool(StatePool):
             self._uncache(b)
             if self.ref[b] == 0:
                 self._free.add(b)
+        self._rebalance_budget()
 
     def _release_block(self, block: int):
         self.ref[block] -= 1
         assert self.ref[block] >= 0
         if self.ref[block] == 0 and block not in self.block_key:
             self._free.add(block)
+            self._rebalance_budget()    # a shrunk budget reclaims releases
 
     # ------------------------------------------------------------- admission
     def blocks_needed(self, prompt_len: int, max_new: int) -> int:
@@ -277,27 +325,25 @@ class PagedKVPool(StatePool):
             self.kv[k] = self.kv[k].at[:, blk, off].set(
                 rows.astype(self.kv[k].dtype))
 
-    def gather_dense(self, slot: int) -> dict:
-        """Materialize the slot's logical KV as a dense (L, 1, max_seq, K,
-        hd) cache — the prior for chunked prefill against a shared prefix
-        (the jnp analogue of a paged-attention kernel's gather)."""
-        bt = jnp.asarray(self.tables[slot])
-        out = {}
-        for k, pool in self.kv.items():
-            L, _, bs, K, hd = pool.shape
-            g = pool[:, bt].reshape(L, self.mb * bs, K, hd)[:, :self.max_seq]
-            out[k] = g[:, None]
-        return out
-
     # --------------------------------------------------------------- decode
     def decode_cache(self) -> dict:
+        """Operands of the compiled decode step: the physical KV block
+        pools — exactly what the paged-attention kernel consumes in place
+        — plus the per-slot block tables.  No dense per-request view is
+        ever materialized."""
         return {"k": self.kv["k"], "v": self.kv["v"],
                 "block_tables": jnp.asarray(self.tables, jnp.int32)}
 
     def set_cache(self, new_cache: dict):
+        """Adopt the block pools returned by a decode / chunked-prefill
+        step (the step wrote new KV rows into them through the tables)."""
         self.kv = {"k": new_cache["k"], "v": new_cache["v"]}
 
     def prepare_step_writes(self, slots, positions):
+        """Resolve copy-on-write for the single position each live slot
+        will write this tick — after this, the compiled step may scatter
+        into the pools without ever touching a block another request
+        still references."""
         for s in slots:
             p = int(positions[s])
             self.prepare_write(s, p, p + 1)
@@ -348,7 +394,7 @@ class PagedKVPool(StatePool):
             cached = sorted((b for b in old_key
                              if old_ref[b] == 0 and b not in seen),
                             key=lambda b: -old_touch.get(b, 0))
-            budget = (self.nb - 1) - len(keep)
+            budget = self.usable_blocks() - len(keep)
             dropped = cached[max(budget, 0):]
             self.cache_evictions += len(dropped)
             keep.extend(cached[:max(budget, 0)])
@@ -372,7 +418,10 @@ class PagedKVPool(StatePool):
                     self.prefix[key] = nb
                     self._touch[nb] = old_touch.get(b, 0)
             self._tick = max(old_touch.values(), default=0)
-            self._free -= {remap[b] for b in keep}
+            moved = {remap[b] for b in keep}
+            self._free -= moved
+            self._reserved -= moved
+            self._rebalance_budget()
         else:
             # re-block: gather each live slot dense from the old geometry,
             # reserve new-size blocks, scatter back
@@ -401,6 +450,13 @@ class PagedKVPool(StatePool):
                                                  K, hd)[:, :written]
                     self.kv[k] = self.kv[k].at[:, blk, off].set(
                         g.astype(self.kv[k].dtype))
+        # the budget floor only has to hold while live data is being
+        # migrated (rebalance never reclaims held blocks); once the live
+        # set owns its blocks, the configured overcommit budget governs
+        # again — a persistent floor would silently under-enforce the
+        # tuned knob after those requests drain
+        self._budget_floor = 0
+        self._rebalance_budget()
         self._place()
         return mapping
 
@@ -457,6 +513,9 @@ class SSMStatePool(StatePool):
         return ("ssm", self.n_slots, self.setting.get("cache_dtype"))
 
     def try_admit(self, prompt: np.ndarray, max_new: int):
+        """Slot-granular admission: recurrent state is O(1) per request,
+        so the only resource is a free slot.  ``shared_len`` is always 0
+        — there is no prefix KV to share."""
         slot = next((i for i, live in enumerate(self.slot_live) if not live),
                     None)
         if slot is None:
@@ -465,6 +524,7 @@ class SSMStatePool(StatePool):
         return slot, 0
 
     def release(self, slot: int):
+        """Return the slot; state is overwritten by the next admission."""
         self.slot_live[slot] = False
 
     def write_prefill(self, slot: int, pcache: dict, P: int):
@@ -510,11 +570,12 @@ class SSMStatePool(StatePool):
 
 
 def make_state_pool(cfg, setting: dict, max_seq: int, ms=None,
-                    n_slots: int | None = None, overcommit: float = 1.0):
+                    n_slots: int | None = None, overcommit: float | None = None):
     """Family dispatch: paged KV for attention families, recurrent-state
     slots for ssm/hybrid.  Encoder-only models have no decode state.
-    ``overcommit`` under-provisions paged blocks relative to the dense
-    worst case (ignored by the slot-granular ssm pool)."""
+    ``overcommit`` (None = take ``setting["block_overcommit"]``)
+    under-provisions paged blocks relative to the dense worst case
+    (ignored by the slot-granular ssm pool)."""
     if cfg.family in ("dense", "moe", "vlm"):
         return PagedKVPool(cfg, setting, max_seq, ms, n_slots, overcommit)
     if cfg.family in ("ssm", "hybrid"):

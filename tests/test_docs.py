@@ -1,0 +1,97 @@
+"""docs/KNOBS.md stays in sync with the live knob registrations: every
+knob in the training and serving spaces has a table row whose kind,
+values and reconfiguration class match the code, and every documented row
+names a registered knob (renames can't leave stale docs behind)."""
+import os
+import re
+
+import pytest
+
+from repro.core import reconfig as rc
+from repro.core.knobs import default_ps_knob_space
+from repro.serving.knobs import SERVING_RELAYOUT_KNOBS, serving_knob_space
+
+DOC = os.path.join(os.path.dirname(__file__), "..", "docs", "KNOBS.md")
+
+ROW = re.compile(r"^\|\s*`(?P<name>[a-z_]+)`\s*\|\s*(?P<kind>\w+)\s*\|"
+                 r"\s*`(?P<values>[^`]+)`\s*\|\s*(?P<reconfig>[\w-]+)\s*\|"
+                 r"\s*(?P<cost>[\w-]+)\s*\|")
+
+
+def _parse_tables():
+    with open(DOC) as f:
+        text = f.read()
+    sections = {}
+    current = None
+    for line in text.splitlines():
+        if line.startswith("## "):
+            title = line[3:].strip().lower()
+            current = ("training" if "training" in title else
+                       "serving" if "serving" in title else None)
+            if current:
+                sections[current] = {}
+        elif current:
+            m = ROW.match(line)
+            if m:
+                sections[current][m["name"]] = m.groupdict()
+    return sections
+
+
+SPACES = {
+    "training": (default_ps_knob_space(n_devices=4),
+                 lambda name: "I-b" if name in rc.MESH_KNOBS else
+                 ("I-a" if name in rc.DATA_KNOBS else "II")),
+    "serving": (serving_knob_space(family="dense"),
+                lambda name: ("I-b" if name in SERVING_RELAYOUT_KNOBS
+                              else "II")),
+}
+
+
+@pytest.mark.parametrize("section", sorted(SPACES))
+def test_every_knob_documented(section):
+    space, classify = SPACES[section]
+    rows = _parse_tables().get(section, {})
+    for knob in space.knobs:
+        assert knob.name in rows, \
+            f"knob {knob.name!r} registered in the {section} space but " \
+            f"missing from docs/KNOBS.md — add a table row"
+        row = rows[knob.name]
+        assert row["kind"] == knob.kind, \
+            f"{knob.name}: documented kind {row['kind']!r} != {knob.kind!r}"
+        assert row["values"] == repr(knob.values), \
+            f"{knob.name}: documented values {row['values']} != " \
+            f"{knob.values!r}"
+        expected = classify(knob.name)
+        assert row["reconfig"] == expected, \
+            f"{knob.name}: documented reconfig {row['reconfig']} != " \
+            f"{expected} (classification from repro.core.reconfig)"
+        assert row["cost"] in rc.DEFAULT_KIND_COSTS, \
+            f"{knob.name}: cost-model kind {row['cost']} is not a " \
+            f"ReconfigCostModel kind"
+
+
+@pytest.mark.parametrize("section", sorted(SPACES))
+def test_no_stale_rows(section):
+    space, _ = SPACES[section]
+    rows = _parse_tables().get(section, {})
+    assert rows, f"no parseable knob table under the {section} heading"
+    names = set(space.names())
+    for documented in rows:
+        assert documented in names, \
+            f"docs/KNOBS.md documents {documented!r} but the {section} " \
+            f"space doesn't register it — stale row?"
+
+
+def test_architecture_doc_exists_and_linked():
+    """ARCHITECTURE.md exists, maps the core paper concepts to modules,
+    and both docs are linked from the README."""
+    arch = os.path.join(os.path.dirname(DOC), "ARCHITECTURE.md")
+    with open(arch) as f:
+        text = f.read()
+    for concept in ("Type II", "Type I-b", "ODMR", "paged_attention",
+                    "StatePool", "TuningManager", "drift"):
+        assert concept in text, f"ARCHITECTURE.md lost {concept!r}"
+    with open(os.path.join(os.path.dirname(DOC), "..", "README.md")) as f:
+        readme = f.read()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/KNOBS.md" in readme
