@@ -67,8 +67,10 @@ def calibrate_service_rate(engine, cfg) -> float:
 
 
 def run_scenario(name, engine, cfg, rate, duration, seed,
-                 tuner_a, tuner_b, slo):
+                 tuner_a, tuner_b, slo, trace_dir=None):
     from repro.core.tuner import TunerConfig, TuningManager
+    from repro.obs import NOP_TRACER, Tracer, write_chrome_trace
+    from repro.obs.report import time_attribution
     from repro.serving import (DEFAULT_SERVING_SETTING,
                                SERVING_RELAYOUT_KNOBS, ServingObjective,
                                serve_loop, serving_knob_space)
@@ -82,13 +84,20 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
            "n_requests": len(trace())}
 
     # every arm starts from the default setting AND a cold prefix cache —
-    # one arm's prefills must never serve another arm's admissions
+    # one arm's prefills must never serve another arm's admissions.  Each
+    # arm gets its own tracer so the time-attribution panel decomposes the
+    # arms separately (self-times: nested spans never double-count).
     engine.reconfigure(DEFAULT_SERVING_SETTING)
     engine.pool.reset_prefix_cache()
+    tr_fx = Tracer()
+    engine.set_tracer(tr_fx)
     out["fixed_default"] = serve_loop(engine, trace())
+    engine.set_tracer(NOP_TRACER)    # the reset below isn't this arm's time
 
     engine.reconfigure(DEFAULT_SERVING_SETTING)
     engine.pool.reset_prefix_cache()
+    tr_tn = Tracer()
+    engine.set_tracer(tr_tn)
     tuner = TuningManager(
         serving_knob_space(family=cfg.family), DEFAULT_SERVING_SETTING,
         TunerConfig(eps=1e-6, a=tuner_a, b=tuner_b, seed=seed,
@@ -100,10 +109,23 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
                     # tuner thrashes
                     window_time_s=2.0),
         objective=ServingObjective(engine, slo_p99_s=slo),
-        reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS})
+        reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
+        tracer=tr_tn)
     out["self_tuned"] = serve_loop(engine, trace(), tuner)
     out["self_tuned"]["tuner_windows"] = len(tuner.history)
     out["self_tuned"]["drift_events"] = len(tuner.drift_events)
+    engine.set_tracer(NOP_TRACER)       # ablations below run untraced
+
+    out["time_attribution"] = {
+        "fixed_default": time_attribution(
+            tr_fx, out["fixed_default"]["wall_s"]),
+        "self_tuned": time_attribution(
+            tr_tn, out["self_tuned"]["wall_s"], audit=tuner.audit),
+    }
+    if trace_dir is not None:
+        import os
+        path = os.path.join(trace_dir, f"trace_{name}.json")
+        write_chrome_trace(path, tr_tn, process_name=f"bench:{name}:tuned")
 
     if name == "shared_prefix":
         # sharing ablation at one fixed batched setting: same paged pool,
@@ -284,7 +306,10 @@ def paged_attention_roofline(cfg, max_seq, bs, batch, ctx_tokens,
 
 def check_report(results: dict, scenarios) -> None:
     """Well-formedness gate (the --ci contract): every scenario has both
-    arms with the full metric set and a completed tuned run."""
+    arms with the full metric set, a completed tuned run, and a
+    well-formed time-attribution panel (non-empty spans, fractions that
+    account for ~all of wall-clock)."""
+    from repro.obs.report import FRACTION_KEYS
     for name in scenarios:
         r = results["scenarios"][name]
         for arm in ("fixed_default", "self_tuned"):
@@ -292,6 +317,20 @@ def check_report(results: dict, scenarios) -> None:
             assert not missing, f"{name}/{arm} missing {missing}"
         assert r["self_tuned"]["completed"] == r["self_tuned"]["requests"], \
             f"{name}: tuned engine dropped requests"
+        assert "time_attribution" in r, f"{name}: no time_attribution panel"
+        for arm in ("fixed_default", "self_tuned"):
+            attr = r["time_attribution"][arm]
+            assert attr["span_counts"], f"{name}/{arm}: no spans recorded"
+            missing = [k for k in FRACTION_KEYS
+                       if k not in attr["fractions"]]
+            assert not missing, \
+                f"{name}/{arm}: attribution missing {missing}"
+            assert abs(attr["fractions_sum"] - 1.0) < 0.02, \
+                (f"{name}/{arm}: fractions sum to {attr['fractions_sum']}, "
+                 f"not ~1.0")
+        tn = r["time_attribution"]["self_tuned"]
+        assert "cost_model_calibration" in tn, \
+            f"{name}: tuned attribution lacks cost-model calibration"
         if "kernel_ablation" in r:
             for arm in ("gather", "paged"):
                 missing = [k for k in REPORT_KEYS
@@ -318,6 +357,9 @@ def main():
                          "the ~8x capacity of a full slot pool")
     ap.add_argument("--duration", type=float, default=None)
     ap.add_argument("--max-seq", type=int, default=96)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="also write a Perfetto-loadable Chrome trace of "
+                         "each scenario's tuned arm to DIR/trace_NAME.json")
     args = ap.parse_args()
 
     from repro.configs.registry import get_config
@@ -349,10 +391,14 @@ def main():
     results = {"arch": cfg.name, "smoke": args.smoke or args.ci,
                "calibrated_base_tokps": base_tokps, "scenarios": {}}
     t0 = time.perf_counter()
+    if args.trace_dir:
+        import os
+        os.makedirs(args.trace_dir, exist_ok=True)
     for name in scenarios:
         print(f"--- scenario {name}", flush=True)
         r = run_scenario(name, engine, cfg, rate, duration, args.seed,
-                         tuner_a, tuner_b, slo=3.0)
+                         tuner_a, tuner_b, slo=3.0,
+                         trace_dir=args.trace_dir)
         results["scenarios"][name] = r
         print(f"    fixed   {r['fixed_default']['tokens_per_s']:8.1f} tok/s  "
               f"p99 {r['fixed_default']['p99_latency_s']:.2f}s")
@@ -360,6 +406,13 @@ def main():
               f"p99 {r['self_tuned']['p99_latency_s']:.2f}s  "
               f"({r['self_tuned']['reconfig_count']} reconfigs, "
               f"speedup {r['speedup']:.2f}x)", flush=True)
+        ta = r["time_attribution"]["self_tuned"]
+        attr_bits = ", ".join(
+            f"{k} {ta['fractions'][k]:.0%}"
+            for k in ("decode", "prefill", "relayout", "recompile", "tuner")
+            if ta["seconds"][k] > 0)
+        print(f"    attr    {attr_bits or 'n/a'} "
+              f"(sum {ta['fractions_sum']:.2f})", flush=True)
         if "sharing_ablation" in r:
             abl = r["sharing_ablation"]
             print(f"    sharing {abl['share_on']['prefill_per_request']:.1f} "

@@ -15,11 +15,44 @@ python -m pytest -x -q tests/test_paged_attention.py
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
 
-echo "== serving bench (fast smoke) =="
+echo "== serving bench (fast smoke, traced) =="
 # one tiny fixed-seed scenario through the tuned engine; fails unless the
 # run completes and emits a well-formed BENCH json (benchmark bit-rot gate).
 # Writes artifacts/bench/BENCH_serving_smoke.json — the canonical
 # artifacts/bench/BENCH_serving.json only ever comes from full runs.
-python benchmarks/bench_serving.py --ci
+# --trace-dir exercises the observability path end-to-end: a Perfetto-
+# loadable Chrome trace of the tuned arm lands next to the report.
+python benchmarks/bench_serving.py --ci --trace-dir artifacts/bench
+
+echo "== observability gate (trace + attribution panel well-formed) =="
+python - <<'EOF'
+import json
+
+trace = json.load(open("artifacts/bench/trace_poisson.json"))
+events = trace["traceEvents"]
+xs = [e for e in events if e.get("ph") == "X"]
+assert xs, "trace has no complete ('X') span events"
+for e in xs:
+    missing = [k for k in ("ph", "ts", "dur", "name") if k not in e]
+    assert not missing, f"trace event missing {missing}: {e}"
+
+rep = json.load(open("artifacts/bench/BENCH_serving_smoke.json"))
+for name, sc in rep["scenarios"].items():
+    panel = sc["time_attribution"]
+    for arm in ("fixed_default", "self_tuned"):
+        attr = panel[arm]
+        assert attr["span_counts"], f"{name}/{arm}: no spans recorded"
+        s = attr["fractions_sum"]
+        assert abs(s - 1.0) < 0.02, f"{name}/{arm}: fractions sum {s}"
+    cal = panel["self_tuned"].get("cost_model_calibration", {})
+    for kind, row in cal.items():
+        # warm ratio: predictions made after at least one observation of
+        # this kind (the model isn't graded on its uninformed seed)
+        r = row["ratio_warm"]
+        assert r is None or 0.5 <= r <= 2.0, \
+            f"{name}: cost model for kind {kind} off by >2x warm (x{r})"
+print(f"observability gate OK ({len(xs)} spans, "
+      f"{len(rep['scenarios'])} scenario panels)")
+EOF
 
 echo "CI OK"

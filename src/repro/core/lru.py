@@ -9,8 +9,11 @@ right signal because the tuner revisits good settings and abandons bad ones.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Callable
+
+from repro.obs.trace import NOP_TRACER
 
 
 class LRUCache:
@@ -21,6 +24,8 @@ class LRUCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.build_time_s = 0.0       # total seconds inside miss factories
+        self.tracer = NOP_TRACER      # emits "exec.build" spans per miss
 
     def get(self, key, default=None):
         if key in self._d:
@@ -44,9 +49,21 @@ class LRUCache:
             self.hits += 1
             return self._d[key]
         self.misses += 1
-        value = factory()
+        # a miss is a trace + AOT compile — the dominant reconfiguration
+        # cost; attribute it wherever it fires (inside a reconfig window
+        # when warmed, inside a tick when a cold path slips through)
+        with self.tracer.span("exec.build", key=str(key)):
+            t0 = time.perf_counter()
+            value = factory()
+            self.build_time_s += time.perf_counter() - t0
         self.put(key, value)
         return value
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions,
+                "build_time_s": round(self.build_time_s, 4)}
 
     def __len__(self):
         return len(self._d)

@@ -63,26 +63,101 @@ class ReconfigCostModel:
     counts: dict = field(default_factory=dict)
     default_cost_s: float | None = None   # uniform override for the seeds
     decay: float = 0.5
+    # per-unit-of-work averages for kinds whose cost scales with how much
+    # state moves (a pool relayout migrating 48 live blocks costs ~10x one
+    # migrating 4 — a scalar average learns from cheap light-load moves,
+    # then under-prices relayouts during load spikes by >2x exactly when
+    # they hurt most).  Keyed like ``avgs``; populated only when callers
+    # pass ``scales`` (units of work) to observe/estimate.
+    unit_avgs: dict = field(default_factory=dict)
+    unit_counts: dict = field(default_factory=dict)
 
-    def observe(self, kinds: tuple, cost_s: float):
-        share = cost_s / max(len(kinds), 1)
-        for k in kinds or ("II",):
+    def apportion(self, kinds: tuple, cost_s: float) -> dict:
+        """Split one observed plan cost across its kinds, proportional to
+        the current per-kind estimates.  An even split systematically
+        mis-calibrates mixed plans — a warm ("I-b", "II") serving switch
+        is dominated by the pool relayout while the executable swap hits
+        the LRU for ~nothing, yet an even split would charge half to each
+        kind forever.  Proportional apportionment is the EM-style fix: the
+        better the per-kind averages get, the better the next observation
+        is attributed (single-kind plans are unaffected)."""
+        kinds = kinds or ("II",)
+        ests = {k: max(self.avgs.get(k, self._seed(k)), 1e-9) for k in kinds}
+        total = sum(ests.values())
+        return {k: cost_s * e / total for k, e in ests.items()}
+
+    def observe(self, kinds: tuple, cost_s: float,
+                measured: dict | None = None,
+                scales: dict | None = None) -> dict:
+        """Fold an observed plan cost into the per-kind averages; returns
+        the per-kind apportionment (the audit log records it next to the
+        prediction the plan was gated on).
+
+        ``measured`` optionally pins a *measured* per-kind breakdown for a
+        subset of the kinds (the serving engine times its pool relayout —
+        the I-b portion — directly); those kinds take their measured
+        seconds and only the remainder is apportioned over the unmeasured
+        kinds.  This is what breaks the mixed-plan fixed point: when every
+        plan is ("I-b", "II"), prior-proportional apportionment alone can
+        never discover that the priors have the ratio backwards.
+
+        ``scales`` optionally gives the units of work each kind moved
+        (blocks migrated by a relayout); those kinds additionally update a
+        per-unit average so later estimates can price the *current* amount
+        of live state instead of a historical mean."""
+        kinds = kinds or ("II",)
+        if measured:
+            meas = {k: min(max(float(v), 0.0), cost_s)
+                    for k, v in measured.items() if k in kinds}
+            rest = tuple(k for k in kinds if k not in meas)
+            rest_s = max(cost_s - sum(meas.values()), 0.0)
+            shares = dict(meas)
+            if rest:
+                shares.update(self.apportion(rest, rest_s))
+        else:
+            shares = self.apportion(kinds, cost_s)
+        for k, share in shares.items():
             if k in self.avgs:
                 self.avgs[k] = (1 - self.decay) * self.avgs[k] \
                     + self.decay * share
             else:
                 self.avgs[k] = share
             self.counts[k] = self.counts.get(k, 0) + 1
+            u = (scales or {}).get(k)
+            if u and u > 0:
+                per = share / float(u)
+                if k in self.unit_avgs:
+                    self.unit_avgs[k] = (1 - self.decay) * self.unit_avgs[k] \
+                        + self.decay * per
+                else:
+                    self.unit_avgs[k] = per
+                self.unit_counts[k] = self.unit_counts.get(k, 0) + 1
+        return shares
 
     def _seed(self, kind: str) -> float:
         if self.default_cost_s is not None:
             return self.default_cost_s
         return DEFAULT_KIND_COSTS.get(kind, 1.0)
 
-    def estimate(self, kinds: tuple) -> float:
+    def estimate_by_kind(self, kinds: tuple,
+                         scales: dict | None = None) -> dict:
+        """Predicted cost per kind.  A kind with a learned per-unit
+        average *and* a caller-supplied current scale is priced
+        ``unit_avg * scale`` — the load-aware path; everything else falls
+        back to the scalar decayed average (or its seed)."""
+        out = {}
+        for k in kinds:
+            u = (scales or {}).get(k)
+            if u and u > 0 and k in self.unit_avgs:
+                out[k] = self.unit_avgs[k] * float(u)
+            else:
+                out[k] = self.avgs.get(k, self._seed(k))
+        return out
+
+    def estimate(self, kinds: tuple, scales: dict | None = None) -> float:
         if not kinds:
             return 0.0
-        return sum(self.avgs.get(k, self._seed(k)) for k in kinds)
+        return sum(self.estimate_by_kind(kinds, scales=scales).values())
 
 
 @dataclass(frozen=True)

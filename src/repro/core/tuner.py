@@ -25,6 +25,8 @@ from repro.core.knobs import KnobSpace, setting_key
 from repro.core.metrics import MetricsRepository
 from repro.core.objective import Objective
 from repro.core.progress import RemainingTimeObjective
+from repro.obs.audit import TuningAudit
+from repro.obs.trace import NOP_TRACER
 
 
 @dataclass
@@ -67,12 +69,18 @@ class TuningManager:
 
     def __init__(self, space: KnobSpace, x0: dict, cfg: TunerConfig,
                  objective: Objective | None = None,
-                 reconfig_knob_classes: dict | None = None):
+                 reconfig_knob_classes: dict | None = None,
+                 tracer=None):
         self.space = space
         self.cfg = cfg
         self.objective = objective or RemainingTimeObjective(
             cfg.eps, cfg.converge_window)
         self._knob_classes = reconfig_knob_classes or {}
+        # observability: deliberation spans + the structured audit log
+        # (always on — a few dict records per window; the driver exports
+        # them via repro.obs.export.write_audit_jsonl)
+        self.tracer = tracer or NOP_TRACER
+        self.audit = TuningAudit()
         self.a = cfg.a or max(2, 3 * cfg.n_workers)
         self.rng = _random.Random(cfg.seed)
         self.bo = LossAwareBO(space, seed=cfg.seed)
@@ -111,9 +119,35 @@ class TuningManager:
         self._iter += 1
         self.repo.add(self._iter, time_s, float(loss))
 
-    def record_reconfig(self, plan: rc.ReconfigPlan, cost_s: float):
-        self.costs.observe(plan.kinds, cost_s)
+    def record_reconfig(self, plan: rc.ReconfigPlan, cost_s: float,
+                        measured: dict | None = None,
+                        scales: dict | None = None):
+        """Fold the observed cost into the cost model AND audit it against
+        what the model predicted when the plan was gated — predicted vs
+        actual per plan is the calibration evidence the bench panel and
+        the >2x smoke gate read.  ``measured`` carries any per-kind
+        seconds the executor timed directly (the serving engine's pool
+        relayout), which anchor the apportionment to ground truth;
+        ``scales`` the units of work each kind actually moved (relayout
+        blocks), which feed the load-aware per-unit averages."""
+        predicted = self.costs.estimate_by_kind(plan.kinds, scales=scales)
+        # kinds whose prediction is still the uninformed seed: calibration
+        # reports them separately (the model can't be graded on its prior)
+        seeded = tuple(k for k in plan.kinds if k not in self.costs.avgs)
+        shares = self.costs.observe(plan.kinds, cost_s, measured=measured,
+                                    scales=scales)
         self.repo.add_reconfig(plan.kinds, cost_s, plan.method)
+        self.audit.reconfig(kinds=plan.kinds, predicted_by_kind=predicted,
+                            actual_s=cost_s, actual_by_kind=shares,
+                            method=plan.method, setting=plan.new,
+                            seeded_kinds=seeded)
+
+    def _reconfig_scales(self) -> dict:
+        """Current units-of-work per kind from the objective (e.g. blocks a
+        relayout would migrate right now) for load-aware cost estimates;
+        objectives without the hook price on scalar averages."""
+        fn = getattr(self.objective, "reconfig_scales", None)
+        return fn() if callable(fn) else {}
 
     @property
     def converged(self) -> bool:
@@ -132,6 +166,9 @@ class TuningManager:
         # as the first evidence of the new regime
         self._check_drift(w.setting, est["Y"])
         self.bo.observe(w.setting, start_loss, est["Y"])
+        # post-switch windows are the "did the move pay off" audit evidence
+        self.audit.window(window=self._window_count, setting=w.setting,
+                          Y=est["Y"], phase=self.phase)
         self.history.append({
             "window": self._window_count, "setting": dict(w.setting),
             "start_loss": start_loss, "Y": est["Y"],
@@ -187,15 +224,31 @@ class TuningManager:
     # ------------------------------------------------------------- stepping
     def maybe_advance(self):
         """Call after each iteration. Returns a ReconfigPlan when the system
-        should switch settings (the driver executes it and reports cost)."""
+        should switch settings (the driver executes it and reports cost).
+        The boundary test stays span-free — it runs every iteration; only
+        an actual deliberation (window close + GP fit + EI + cost gate)
+        opens the "tuner.deliberate" span."""
         if self._iter < self._next_boundary and not self._window_time_up():
             return None
+        with self.tracer.span("tuner.deliberate", window=self._window_count,
+                              phase=self.phase):
+            return self._deliberate()
+
+    def _deliberate(self):
         self._close_window()
         self._window_count += 1
 
         if self._init_queue:
             nxt = self._init_queue.pop(0)
             plan = self._plan(nxt)
+            scales = self._reconfig_scales()
+            self.audit.decision(
+                window=self._window_count, phase="init", candidate=nxt,
+                incumbent=self.current, switched=True, reason="init_sample",
+                predicted_by_kind=self.costs.estimate_by_kind(
+                    plan.kinds, scales=scales),
+                predicted_cost_s=self.costs.estimate(plan.kinds,
+                                                     scales=scales))
             self._switch_to(nxt)
             self._next_boundary = self._iter + self.a
             return plan
@@ -208,18 +261,33 @@ class TuningManager:
         stay = setting_key(x_new) == setting_key(self.current)
         if not stay:
             plan = self._plan(x_new)
-            r_cost = self.costs.estimate(plan.kinds)
+            scales = self._reconfig_scales()
+            r_cost = self.costs.estimate(plan.kinds, scales=scales)
             # hysteresis: noisy Y observations inflate EI; require the
             # improvement to also be a meaningful fraction of the predicted
             # remaining time before paying a reconfiguration
             rel = (self.cfg.ei_rel_threshold * best_s
                    if best_s not in (float("inf"),) else 0.0)
-            stay = ei_s <= r_cost + self.cfg.min_ei_seconds + rel
+            threshold = r_cost + self.cfg.min_ei_seconds + rel
+            stay = ei_s <= threshold
+            self.audit.decision(
+                window=self._window_count, phase="online", candidate=x_new,
+                incumbent=self.current, switched=not stay,
+                reason="switch" if not stay else "ei_below_cost",
+                ei_s=ei_s, best_s=best_s, predicted_cost_s=r_cost,
+                predicted_by_kind=self.costs.estimate_by_kind(
+                    plan.kinds, scales=scales),
+                threshold_s=threshold)
             if not stay:
                 self._switch_to(x_new)
                 self._a_scale = 1
                 self._next_boundary = self._iter + self.a
                 return plan
+        else:
+            self.audit.decision(
+                window=self._window_count, phase="online", candidate=x_new,
+                incumbent=self.current, switched=False, reason="incumbent",
+                ei_s=ei_s, best_s=best_s)
         # staying put: stretch the window (less BO overhead once stable,
         # back to `a` after any switch)
         self._a_scale = min(self._a_scale * 2, 16)

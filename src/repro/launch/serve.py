@@ -26,6 +26,9 @@ import jax
 
 def _engine_main(args, cfg, params):
     from repro.core.tuner import TunerConfig, TuningManager
+    from repro.obs import (MetricsRegistry, Tracer, write_audit_jsonl,
+                           write_chrome_trace)
+    from repro.obs.report import format_attribution, time_attribution
     from repro.serving import (DEFAULT_SERVING_SETTING,
                                SERVING_RELAYOUT_KNOBS, ServingEngine,
                                ServingObjective, serve_loop,
@@ -64,6 +67,13 @@ def _engine_main(args, cfg, params):
               f"{time.perf_counter() - t0:.1f}s", flush=True)
     trace = make_trace(args.scenario, args.rate, args.duration,
                        vocab=cfg.vocab_size, seed=args.seed, **trace_kw)
+    # attach the tracer after warm-start so the attribution panel covers
+    # the serving run, not startup compilation (a --cold run still shows
+    # its compiles: they fire inside ticks/reconfig windows as exec.build)
+    tracer = None
+    if args.trace:
+        tracer = Tracer()
+        engine.set_tracer(tracer, MetricsRegistry(enabled=True))
     tuner = None
     if args.selftune:
         tuner = TuningManager(
@@ -72,7 +82,8 @@ def _engine_main(args, cfg, params):
                         seed=args.seed, drift_z=args.drift_z,
                         window_time_s=2.0),
             objective=ServingObjective(engine, slo_p99_s=args.slo),
-            reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS})
+            reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
+            tracer=tracer)
 
     mode = "selftune" if args.selftune else f"fixed(max_batch={args.batch})"
     print(f"arch={cfg.name} family={cfg.family} pool={engine.pool.kind} "
@@ -96,6 +107,20 @@ def _engine_main(args, cfg, params):
         print(f"reconfigurations: {stats['reconfig_count']} "
               f"({stats['reconfig_total_s']:.2f}s total), "
               f"final setting: {stats['final_setting']}")
+    if tracer is not None:
+        audit = tuner.audit if tuner is not None else None
+        attr = time_attribution(tracer, stats["wall_s"], audit=audit)
+        stats["time_attribution"] = attr
+        print(format_attribution(attr), flush=True)
+        n_ev = write_chrome_trace(args.trace, tracer,
+                                  process_name=f"serve:{cfg.name}")
+        print(f"trace: {n_ev} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)", flush=True)
+        if audit is not None and audit.records:
+            audit_path = args.trace + ".audit.jsonl"
+            n_rec = write_audit_jsonl(audit_path, audit)
+            print(f"tuning audit: {n_rec} records -> {audit_path}",
+                  flush=True)
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(stats, f, indent=1, default=str)
@@ -135,6 +160,11 @@ def main():
     ap.add_argument("--cold", action="store_true",
                     help="skip the startup executable warm-up (reconfig "
                          "costs then include cold XLA compiles)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of the run, plus PATH.audit.jsonl with "
+                         "the tuner's decision/reconfig audit when "
+                         "--selftune is on")
     ap.add_argument("--json-out", default=None)
     args = ap.parse_args()
 

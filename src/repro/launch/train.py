@@ -35,11 +35,16 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace-event JSON (Perfetto-"
+                         "loadable) of the run")
     args = ap.parse_args()
 
     from repro.checkpoint import CheckpointManager
     from repro.configs.registry import get_config
     from repro.core.tuner import TunerConfig, TuningManager
+    from repro.obs import NOP_TRACER, Tracer, write_chrome_trace
+    from repro.obs.report import format_attribution, time_attribution
     from repro.ps.lm_job import (DEFAULT_LM_SETTING, LMJob, lm_knob_space)
     from repro.ps.trainer import SelfTuningLoop
 
@@ -64,12 +69,14 @@ def main():
         except FileNotFoundError:
             print("no checkpoint found; starting fresh", flush=True)
 
+    tracer = Tracer() if args.trace else None
+    t_run0 = time.perf_counter()
     if args.self_tune:
         space = lm_knob_space(len(jax.devices()))
         tuner = TuningManager(space, setting, TunerConfig(
             eps=args.eps, a=args.tuner_a, b=args.tuner_b, seed=args.seed))
         loop = SelfTuningLoop(tuner, job.step_builder, job.state_adapter,
-                              checkpoint_manager=ckpt)
+                              checkpoint_manager=ckpt, tracer=tracer)
         res, state = loop.run(state, job.batches(args.seed),
                               max_iters=args.steps, verbose=True)
         print(f"done: iters={res.iterations} wall={res.wall_time_s:.1f}s "
@@ -80,13 +87,15 @@ def main():
         print(f"progress indicator: remaining ~{rep['remaining_iters']:.0f} "
               f"iters / {rep['remaining_time_s']:.1f}s", flush=True)
     else:
+        tr = tracer or NOP_TRACER
         step = jax.jit(job.step_builder(setting))
         bi = job.batches(args.seed)
         losses = []
         t0 = time.perf_counter()
         for it in range(1, args.steps + 1):
-            state, m = step(state, next(bi))
-            losses.append(float(m["loss"]))
+            with tr.span("train.step", it=it):
+                state, m = step(state, next(bi))
+                losses.append(float(m["loss"]))
             if ckpt is not None:
                 ckpt.maybe_save(state, it, {"loss": losses[-1]})
             if it % 20 == 0:
@@ -96,6 +105,16 @@ def main():
             if np.mean(losses[-8:]) <= args.eps and len(losses) >= 8:
                 print("converged", flush=True)
                 break
+    if tracer is not None:
+        wall = time.perf_counter() - t_run0
+        audit = tuner.audit if args.self_tune else None
+        attr = time_attribution(tracer, wall, audit=audit,
+                                extra_keys=("train_step",))
+        print(format_attribution(attr), flush=True)
+        n_ev = write_chrome_trace(args.trace, tracer,
+                                  process_name=f"train:{cfg.name}")
+        print(f"trace: {n_ev} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)", flush=True)
     print("OK", flush=True)
 
 

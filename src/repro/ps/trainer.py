@@ -26,6 +26,7 @@ from repro.core.knobs import setting_key
 from repro.core.lru import LRUCache, aot_compile
 from repro.core.reconfig import ReconfigPlan
 from repro.core.tuner import TuningManager
+from repro.obs.trace import NOP_TRACER
 
 
 @dataclass
@@ -42,7 +43,8 @@ class SelfTuningLoop:
     def __init__(self, tuner: TuningManager,
                  step_builder: Callable[[dict], Callable],
                  state_adapter: Callable | None = None,
-                 checkpoint_manager=None, step_cache_size: int = 8):
+                 checkpoint_manager=None, step_cache_size: int = 8,
+                 tracer=None):
         self.tuner = tuner
         self.step_builder = step_builder
         self.state_adapter = state_adapter or (lambda state, plan: state)
@@ -50,6 +52,13 @@ class SelfTuningLoop:
         # bounded: the tuner's exploration history would otherwise pin one
         # executable per visited setting forever
         self._steps = LRUCache(step_cache_size)
+        # one tracer across loop + tuner + executable cache, so a run's
+        # wall-clock decomposes into step / recompile / relayout / tuner
+        # deliberation (repro.obs.report.time_attribution)
+        self.tracer = tracer or NOP_TRACER
+        self._steps.tracer = self.tracer
+        if tracer is not None:
+            tuner.tracer = tracer
 
     def _get_step(self, setting: dict, state, batch):
         return self._steps.get_or_create(
@@ -66,8 +75,9 @@ class SelfTuningLoop:
         it = 0
         while it < max_iters and not tuner.converged:
             t0 = time.perf_counter()
-            state, metrics = step(state, batch)
-            loss = float(metrics["loss"])
+            with self.tracer.span("train.step", it=it):
+                state, metrics = step(state, batch)
+                loss = float(metrics["loss"])
             dt = time.perf_counter() - t0
             it += 1
             tuner.record_iteration(loss, dt)
@@ -77,11 +87,13 @@ class SelfTuningLoop:
 
             plan = tuner.maybe_advance()
             if plan is not None:
-                r0 = time.perf_counter()
-                state = self.state_adapter(state, plan)
-                step = self._get_step(tuner.current, state, batch)
-                jax.block_until_ready(state)
-                rcost = time.perf_counter() - r0
+                with self.tracer.span("reconfig.apply",
+                                      kinds=",".join(plan.kinds)):
+                    r0 = time.perf_counter()
+                    state = self.state_adapter(state, plan)
+                    step = self._get_step(tuner.current, state, batch)
+                    jax.block_until_ready(state)
+                    rcost = time.perf_counter() - r0
                 reconfig_total += rcost
                 tuner.record_reconfig(plan, rcost)
                 if verbose:

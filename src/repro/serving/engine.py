@@ -43,6 +43,8 @@ from repro.core.lru import LRUCache, aot_compile
 from repro.core.reconfig import (ReconfigPlan, classify as rc_classify,
                                  plan as rc_plan)
 from repro.kernels.quant import dequantize_ref, quantize_ref
+from repro.obs.metrics import NULL_METRICS
+from repro.obs.trace import NOP_TRACER
 from repro.models import lm
 from repro.models.lm import ModelKnobs
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
@@ -80,7 +82,7 @@ class ServingEngine:
     def __init__(self, params, cfg, setting: dict | None = None, *,
                  max_seq: int = 96, ms=None, step_cache_size: int = 24,
                  block_overcommit: float | None = None,
-                 attn_impl: str = "paged"):
+                 attn_impl: str = "paged", tracer=None, metrics=None):
         if cfg.family not in self.SUPPORTED_FAMILIES:
             raise NotImplementedError(
                 f"serving engine supports {self.SUPPORTED_FAMILIES}; "
@@ -98,10 +100,15 @@ class ServingEngine:
         self.setting.update(setting or {})
         if block_overcommit is not None:    # explicit override of the knob
             self.setting["block_overcommit"] = block_overcommit
+        # observability: nested spans on the hot paths + counters/gauges
+        # (both default to the shared zero-overhead no-op instruments)
+        self.tr = tracer or NOP_TRACER
+        self.metrics = metrics or NULL_METRICS
         # compiled executables, bounded-LRU (same policy as the trainer):
         # decode per (pool layout, context bucket), prefill per (bucket,
         # k_chunk), chunked shared-prefix prefill per (bucket, pool layout)
         self._steps = LRUCache(step_cache_size)
+        self._steps.tracer = self.tr
         self.queue: deque[Request] = deque()
         self.pool = make_state_pool(cfg, self.setting, max_seq, ms)
         self._reset_slots()
@@ -116,6 +123,8 @@ class ServingEngine:
         self.prefill_tokens_total = 0      # tokens the prompts contained
         self.decode_time_s = 0.0           # wall time inside decode execs
         self.decode_tokens = 0             # tokens those execs produced
+        self.last_reconfig_breakdown = {}  # measured per-kind s, last plan
+        self.last_reconfig_scales = {}     # units migrated, last plan
 
     def _reset_slots(self):
         n = self.pool.n_slots
@@ -144,6 +153,16 @@ class ServingEngine:
         return bool(self.queue) or self.n_active > 0
 
     # ----------------------------------------------------------- lifecycle
+    def set_tracer(self, tracer, metrics=None):
+        """Attach (or, with NOP_TRACER, detach) observability sinks.  The
+        executable cache shares the tracer so compile time is attributed
+        wherever it actually fires — inside a reconfiguration window when
+        warmed, inside a tick when a cold path slips through."""
+        self.tr = tracer
+        self._steps.tracer = tracer
+        if metrics is not None:
+            self.metrics = metrics
+
     def submit(self, req: Request, now: float | None = None):
         if req.max_new < 1:
             raise ValueError("max_new must be >= 1")
@@ -292,6 +311,10 @@ class ServingEngine:
         return self._steps.get_or_create(key, build)
 
     def _try_admit(self, req: Request) -> bool:
+        with self.tr.span("serve.admit", rid=req.rid, plen=len(req.prompt)):
+            return self._admit(req)
+
+    def _admit(self, req: Request) -> bool:
         res = self.pool.try_admit(req.prompt, req.max_new)
         if res is None:
             return False
@@ -316,11 +339,14 @@ class ServingEngine:
             cache = {"k": pool_kv["k"], "v": pool_kv["v"],
                      "block_tables": jnp.asarray(
                          self.pool.tables[slot:slot + 1], jnp.int32)}
-            logits, newc = self._chunk_prefill_exec(bucket)(
-                self.params, cache, jnp.asarray(padded),
-                jnp.asarray([shared], jnp.int32),
-                jnp.asarray(n - 1, jnp.int32))
-            self.pool.set_cache(newc)
+            with self.tr.span("serve.chunk_prefill", bucket=bucket,
+                              suffix=n, shared=shared):
+                logits, newc = self._chunk_prefill_exec(bucket)(
+                    self.params, cache, jnp.asarray(padded),
+                    jnp.asarray([shared], jnp.int32),
+                    jnp.asarray(n - 1, jnp.int32))
+                self.pool.set_cache(newc)
+                tok = int(jnp.argmax(logits[0]))
             if self.setting["quant"] == "int8":
                 # re-quantize the freshly written suffix rows in place, at
                 # bucket granularity (blockwise per-position quant, so
@@ -329,37 +355,44 @@ class ServingEngine:
                 # compiles; rows past the cache boundary are zero-padded
                 # back to the bucket — pad positions form their own quant
                 # blocks and are discarded by the bounded write below
-                m = min(bucket, self.max_seq - shared)
-                pos = np.arange(shared, shared + m)
-                blk = jnp.asarray(self.pool.tables[slot, pos // self.pool.bs])
-                off = jnp.asarray(pos % self.pool.bs)
-                kv = {k: self.pool.kv[k][:, blk, off] for k in ("k", "v")}
-                if m < bucket:
-                    kv = {k: jnp.pad(v, ((0, 0), (0, bucket - m),
-                                         (0, 0), (0, 0)))
+                with self.tr.span("serve.quant", bucket=bucket):
+                    m = min(bucket, self.max_seq - shared)
+                    pos = np.arange(shared, shared + m)
+                    blk = jnp.asarray(
+                        self.pool.tables[slot, pos // self.pool.bs])
+                    off = jnp.asarray(pos % self.pool.bs)
+                    kv = {k: self.pool.kv[k][:, blk, off]
+                          for k in ("k", "v")}
+                    if m < bucket:
+                        kv = {k: jnp.pad(v, ((0, 0), (0, bucket - m),
+                                             (0, 0), (0, 0)))
+                              for k, v in kv.items()}
+                    kv = {k: self._quant_exec(bucket)(v)
                           for k, v in kv.items()}
-                kv = {k: self._quant_exec(bucket)(v) for k, v in kv.items()}
-                self.pool.write_kv(slot, {k: v[:, :n] for k, v in kv.items()},
-                                   start=shared)
-            tok = int(jnp.argmax(logits[0]))
+                    self.pool.write_kv(slot,
+                                       {k: v[:, :n] for k, v in kv.items()},
+                                       start=shared)
             self.prefill_tokens_computed += n
         else:
             bucket = self._bucket(P)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :P] = req.prompt
-            logits, pcache = self._prefill_exec(bucket)(
-                self.params, jnp.asarray(padded),
-                jnp.asarray(P - 1, jnp.int32))
-            if self.pool.kind == "paged":
-                kv = {k: pcache[k][:, 0] for k in ("k", "v")}
-                if self.setting["quant"] == "int8":
-                    kv = {k: self._quant_exec(bucket)(v)
-                          for k, v in kv.items()}
-                self.pool.write_kv(slot, {k: v[:, :P]
-                                          for k, v in kv.items()}, start=0)
-            else:
-                self.pool.write_prefill(slot, pcache, P)
-            tok = int(jnp.argmax(logits[0]))
+            with self.tr.span("serve.prefill", bucket=bucket, plen=P):
+                logits, pcache = self._prefill_exec(bucket)(
+                    self.params, jnp.asarray(padded),
+                    jnp.asarray(P - 1, jnp.int32))
+                if self.pool.kind == "paged":
+                    kv = {k: pcache[k][:, 0] for k in ("k", "v")}
+                    if self.setting["quant"] == "int8":
+                        with self.tr.span("serve.quant", bucket=bucket):
+                            kv = {k: self._quant_exec(bucket)(v)
+                                  for k, v in kv.items()}
+                    self.pool.write_kv(slot, {k: v[:, :P]
+                                              for k, v in kv.items()},
+                                       start=0)
+                else:
+                    self.pool.write_prefill(slot, pcache, P)
+                tok = int(jnp.argmax(logits[0]))
             self.prefill_tokens_computed += P
         self.prefill_tokens_total += P
         req.tokens_out = [tok]
@@ -385,6 +418,10 @@ class ServingEngine:
         """One scheduling quantum.  Returns tick metrics for the driver."""
         if now is not None:
             self.clock = now
+        with self.tr.span("serve.tick"):
+            return self._tick()
+
+    def _tick(self) -> dict:
         t0 = time.perf_counter()
         self.ticks += 1
         tokens = 0
@@ -425,12 +462,13 @@ class ServingEngine:
             tok = jnp.asarray(self.slot_tok[:, None])
             pos = jnp.asarray(self.slot_pos)
             cols = self._ctx_cols(int(self.slot_pos[active].max()))
-            t_dec = time.perf_counter()
-            logits, new_cache = self._decode_exec(cols)(
-                self.params, self.pool.decode_cache(), tok, pos)
-            jax.block_until_ready(logits)
-            self.decode_time_s += time.perf_counter() - t_dec
-            self.decode_tokens += len(active)
+            with self.tr.span("serve.decode", batch=len(active), cols=cols):
+                t_dec = time.perf_counter()
+                logits, new_cache = self._decode_exec(cols)(
+                    self.params, self.pool.decode_cache(), tok, pos)
+                jax.block_until_ready(logits)
+                self.decode_time_s += time.perf_counter() - t_dec
+                self.decode_tokens += len(active)
             self.pool.set_cache(new_cache)
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
             for slot, req in enumerate(self.slot_req):
@@ -453,6 +491,14 @@ class ServingEngine:
             self._relayout_pool()
 
         dt = time.perf_counter() - t0
+        if self.metrics.enabled:
+            self.metrics.histogram("serve.tick_s").observe(dt)
+            self.metrics.gauge("serve.active_slots").set(self.n_active)
+            self.metrics.gauge("serve.queue_depth").set(self.queue_depth)
+            snap = self.pool.snapshot()
+            if "block_utilization" in snap:
+                self.metrics.gauge("pool.block_utilization").set(
+                    snap["block_utilization"])
         return {"dt": dt, "tokens": tokens, "active": self.n_active,
                 "queued": self.queue_depth, "load": self.load,
                 "idle": tokens == 0 and not self.has_work()}
@@ -542,20 +588,37 @@ class ServingEngine:
         classes rather than trusted from ``plan.kinds`` — a tuner wired
         without them would otherwise leave the pool behind the setting.
         """
-        t0 = time.perf_counter()
-        kinds = rc_classify(self.setting, plan.new,
-                            mesh_knobs=SERVING_RELAYOUT_KNOBS)
-        self.setting.update(plan.new)
-        if "I-b" in kinds:
-            self._relayout_pool()
-        else:
-            self.pool.update_policy(self.setting)    # policy knobs
-        # warm the hot-path executables for the new setting (SSR): every
-        # context bucket, so no decode tick pays a cold compile
-        for cols in self._ctx_buckets():
-            self._decode_exec(cols)
-        jax.block_until_ready(self.pool.decode_cache())
-        return time.perf_counter() - t0
+        with self.tr.span("reconfig.apply", kinds=",".join(plan.kinds)):
+            t0 = time.perf_counter()
+            kinds = rc_classify(self.setting, plan.new,
+                                mesh_knobs=SERVING_RELAYOUT_KNOBS)
+            self.setting.update(plan.new)
+            relayout_s = 0.0
+            if "I-b" in kinds:
+                r0 = time.perf_counter()
+                self._relayout_pool()
+                relayout_s = time.perf_counter() - r0
+            else:
+                self.pool.update_policy(self.setting)    # policy knobs
+            # warm the hot-path executables for the new setting (SSR): every
+            # context bucket, so no decode tick pays a cold compile
+            for cols in self._ctx_buckets():
+                self._decode_exec(cols)
+            jax.block_until_ready(self.pool.decode_cache())
+            # measured per-kind breakdown: the I-b portion is the timed
+            # relayout, everything else (executable swap, warmup, barrier)
+            # is Type II work.  ReconfigCostModel.observe takes this over
+            # prior-proportional apportionment — without it, all-mixed
+            # plans can never correct a backwards prior (the seeds say II
+            # >> I-b; warm serving is the opposite).
+            self.last_reconfig_breakdown = (
+                {"I-b": relayout_s} if "I-b" in kinds else {})
+            # units the relayout actually migrated, for the cost model's
+            # load-aware per-unit I-b average
+            self.last_reconfig_scales = (
+                {"I-b": self.pool.last_relayout_blocks}
+                if "I-b" in kinds else {})
+            return time.perf_counter() - t0
 
     def set_attn_impl(self, impl: str):
         """Switch the paged-attention implementation ("paged" | "gather").
@@ -568,20 +631,38 @@ class ServingEngine:
             self._decode_exec(cols)
 
     def _relayout_pool(self):
-        live_extents = {}
-        for slot, req in enumerate(self.slot_req):
-            if req is None:
-                continue
-            written = int(self.slot_pos[slot])      # state valid for [0, w)
-            reserved = min(len(req.prompt) + req.max_new, self.max_seq)
-            live_extents[slot] = (written, reserved)
-        old_req, old_pos, old_tok = self.slot_req, self.slot_pos, self.slot_tok
-        mapping = self.pool.relayout(self.setting, live_extents)
-        self._reset_slots()
-        for old, new in mapping.items():
-            self.slot_req[new] = old_req[old]
-            self.slot_pos[new] = old_pos[old]
-            self.slot_tok[new] = old_tok[old]
+        with self.tr.span("reconfig.relayout",
+                          live=self.n_active,
+                          block_size=self.setting.get("block_size"),
+                          max_batch=self.setting.get("max_batch")):
+            live_extents = {}
+            for slot, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                written = int(self.slot_pos[slot])  # state valid for [0, w)
+                reserved = min(len(req.prompt) + req.max_new, self.max_seq)
+                live_extents[slot] = (written, reserved)
+            old_req, old_pos, old_tok = (self.slot_req, self.slot_pos,
+                                         self.slot_tok)
+            # a shrink below the live set must not land the pool on a
+            # transient geometry (n_slots = live count): such geometries
+            # are outside the knob space, so warm_start never compiled
+            # their decode executables and apply_plan's warm loop pays
+            # ~6 cold XLA compiles inside the reconfig window (then the
+            # drain shrink discards them).  Keep the current slot count
+            # instead; the drain check in step() finishes the shrink on
+            # the warmed target geometry once the backlog clears.
+            min_slots = (self.pool.n_slots
+                         if len(live_extents) > self.setting["max_batch"]
+                         else 0)
+            mapping = self.pool.relayout(self.setting, live_extents,
+                                         min_slots=min_slots)
+            self._reset_slots()
+            for old, new in mapping.items():
+                self.slot_req[new] = old_req[old]
+                self.slot_pos[new] = old_pos[old]
+                self.slot_tok[new] = old_tok[old]
+            self.metrics.counter("pool.relayouts").inc()
 
 
 def serve_loop(engine: ServingEngine, trace, tuner=None, *,
@@ -630,7 +711,9 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
             plan = tuner.maybe_advance()
             if plan is not None:
                 cost = engine.apply_plan(plan)
-                tuner.record_reconfig(plan, cost)
+                tuner.record_reconfig(
+                    plan, cost, measured=engine.last_reconfig_breakdown,
+                    scales=engine.last_reconfig_scales)
                 reconfig_total_s += cost
                 reconfigs.append({
                     "t": round(time.perf_counter() - t_start, 3),
@@ -670,5 +753,9 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         "decode_s": engine.decode_time_s - dt0,
         "decode_tok_per_s": ((engine.decode_tokens - dk0)
                              / max(engine.decode_time_s - dt0, 1e-9)),
+        # observability: end-of-run pool occupancy and executable-cache
+        # state (hit/miss/build-time — Type II swap warmth in one line)
+        "pool": engine.pool.snapshot(),
+        "exec_cache": engine._steps.stats(),
     }
     return stats

@@ -73,3 +73,13 @@ class ServingObjective:
 
     def is_converged(self, repo) -> bool:
         return False                      # serving never "converges"
+
+    def reconfig_scales(self) -> dict:
+        """Units of state a Type I-b relayout would migrate *right now*
+        (paged: held KV blocks — live + cached both move; ssm: live slot
+        rows).  The tuner passes this to ReconfigCostModel.estimate so a
+        relayout proposed during a load spike is priced at the spike's
+        migration volume, not a historical light-load average."""
+        snap = self.engine.pool.snapshot()
+        units = snap.get("blocks_held", snap.get("live_slots", 0))
+        return {"I-b": max(int(units), 1)}

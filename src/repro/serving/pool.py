@@ -68,6 +68,9 @@ class StatePool:
     shared_blocks_hit = 0
     cow_copies = 0
     cache_evictions = 0
+    # units of state the last relayout migrated (paged: KV blocks, ssm:
+    # slot rows) — the ReconfigCostModel's load-aware I-b scale
+    last_relayout_blocks = 0
 
     def reset_prefix_cache(self):
         """Forget cached (refcount-0) shared state so one benchmark arm's
@@ -78,6 +81,15 @@ class StatePool:
         """Adopt Type II policy knobs (no state relocation).  The paged
         pool additionally rebalances its overcommit block budget."""
         self.setting = dict(setting)
+
+    def snapshot(self) -> dict:
+        """Occupancy/effectiveness counters for the observability layer
+        (gauges per tick, a one-shot summary in serve_loop stats)."""
+        return {"kind": self.kind, "n_slots": self.n_slots,
+                "live_slots": self.n_active,
+                "shared_blocks_hit": self.shared_blocks_hit,
+                "cow_copies": self.cow_copies,
+                "cache_evictions": self.cache_evictions}
 
 
 class PagedKVPool(StatePool):
@@ -177,6 +189,23 @@ class PagedKVPool(StatePool):
     def exec_key(self) -> tuple:
         return ("paged", self.n_slots, self.nb, self.bs,
                 self.setting.get("cache_dtype"))
+
+    def snapshot(self) -> dict:
+        """Block-level occupancy: how much of the overcommit budget live
+        requests + the prefix cache actually hold right now."""
+        usable = self.usable_blocks()
+        held = (self.nb - 1) - len(self._free) - len(self._reserved)
+        return {
+            **super().snapshot(),
+            "block_size": self.bs,
+            "blocks_total": self.nb - 1,
+            "blocks_usable": usable,
+            "blocks_held": held,
+            "blocks_free": len(self._free),
+            "block_utilization": held / max(usable, 1),
+            "prefix_cached_blocks": len(self.block_key),
+            "evictable_blocks": self.evictable_blocks(),
+        }
 
     # ------------------------------------------------------- block plumbing
     def _alloc_block(self) -> int | None:
@@ -422,9 +451,11 @@ class PagedKVPool(StatePool):
             self._free -= moved
             self._reserved -= moved
             self._rebalance_budget()
+            self.last_relayout_blocks = len(keep)
         else:
             # re-block: gather each live slot dense from the old geometry,
             # reserve new-size blocks, scatter back
+            self.last_relayout_blocks = 0
             for s in live:
                 written, reserved = live_extents[s]
                 ns = mapping[s]
@@ -438,6 +469,7 @@ class PagedKVPool(StatePool):
                 self.slot_blocks[ns] = blocks
                 self.tables[ns, :len(blocks)] = blocks
                 self.slot_live[ns] = True
+                self.last_relayout_blocks += len(blocks)
                 if written == 0:
                     continue
                 bt = jnp.asarray(old_tables[s])
@@ -558,6 +590,7 @@ class SSMStatePool(StatePool):
         mapping = {s: i for i, s in enumerate(live)}
         self.state = relocate_rows(old_state, self.state, live,
                                    [mapping[s] for s in live], axis=1)
+        self.last_relayout_blocks = len(live)
         for s in live:
             self.slot_live[mapping[s]] = True
         if self.ms is not None:

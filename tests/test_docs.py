@@ -1,7 +1,11 @@
-"""docs/KNOBS.md stays in sync with the live knob registrations: every
-knob in the training and serving spaces has a table row whose kind,
-values and reconfiguration class match the code, and every documented row
-names a registered knob (renames can't leave stale docs behind)."""
+"""Docs stay in sync with the live registries.
+
+docs/KNOBS.md: every knob in the training and serving spaces has a table
+row whose kind, values and reconfiguration class match the code, and
+every documented row names a registered knob (renames can't leave stale
+docs behind).  docs/OBSERVABILITY.md: the span-taxonomy table matches
+``repro.obs.trace.SPAN_NAMES`` and ``repro.obs.report.CATEGORY`` in both
+directions — adding a span name without a docs row fails CI."""
 import os
 import re
 
@@ -9,9 +13,12 @@ import pytest
 
 from repro.core import reconfig as rc
 from repro.core.knobs import default_ps_knob_space
+from repro.obs.report import CATEGORY, FRACTION_KEYS
+from repro.obs.trace import SPAN_NAMES
 from repro.serving.knobs import SERVING_RELAYOUT_KNOBS, serving_knob_space
 
 DOC = os.path.join(os.path.dirname(__file__), "..", "docs", "KNOBS.md")
+OBS_DOC = os.path.join(os.path.dirname(DOC), "OBSERVABILITY.md")
 
 ROW = re.compile(r"^\|\s*`(?P<name>[a-z_]+)`\s*\|\s*(?P<kind>\w+)\s*\|"
                  r"\s*`(?P<values>[^`]+)`\s*\|\s*(?P<reconfig>[\w-]+)\s*\|"
@@ -80,6 +87,63 @@ def test_no_stale_rows(section):
         assert documented in names, \
             f"docs/KNOBS.md documents {documented!r} but the {section} " \
             f"space doesn't register it — stale row?"
+
+
+SPAN_ROW = re.compile(r"^\|\s*`(?P<name>[a-z_.]+)`\s*\|"
+                      r"\s*(?P<category>\w+)\s*\|")
+
+
+def _parse_span_table():
+    with open(OBS_DOC) as f:
+        text = f.read()
+    rows = {}
+    for line in text.splitlines():
+        m = SPAN_ROW.match(line)
+        if m:
+            rows[m["name"]] = m["category"]
+    return rows
+
+
+def test_every_span_documented():
+    """Adding a span name to SPAN_NAMES without a docs row fails here."""
+    rows = _parse_span_table()
+    assert rows, "no parseable span table in docs/OBSERVABILITY.md"
+    for name in SPAN_NAMES:
+        assert name in rows, \
+            f"span {name!r} registered in repro.obs.trace.SPAN_NAMES but " \
+            f"missing from the docs/OBSERVABILITY.md taxonomy table"
+        assert rows[name] == CATEGORY[name], \
+            f"span {name!r}: documented category {rows[name]!r} != " \
+            f"{CATEGORY[name]!r} (repro.obs.report.CATEGORY)"
+
+
+def test_no_stale_span_rows():
+    for documented in _parse_span_table():
+        assert documented in SPAN_NAMES, \
+            f"docs/OBSERVABILITY.md documents span {documented!r} but " \
+            f"SPAN_NAMES doesn't register it — stale row?"
+
+
+def test_span_categories_well_formed():
+    """Every registered span has an attribution category, and every
+    serving-side category is one the bench panel reports on."""
+    for name in SPAN_NAMES:
+        assert name in CATEGORY, \
+            f"span {name!r} has no repro.obs.report.CATEGORY entry — " \
+            f"its self time would silently land in 'other'"
+    for name, cat in CATEGORY.items():
+        assert name in SPAN_NAMES, f"CATEGORY maps unregistered {name!r}"
+        if not name.startswith("train."):
+            assert cat in FRACTION_KEYS, \
+                f"span {name!r} maps to {cat!r}, absent from FRACTION_KEYS"
+
+
+def test_observability_doc_linked():
+    root = os.path.join(os.path.dirname(DOC), "..")
+    with open(os.path.join(root, "README.md")) as f:
+        assert "docs/OBSERVABILITY.md" in f.read()
+    with open(os.path.join(os.path.dirname(DOC), "ARCHITECTURE.md")) as f:
+        assert "OBSERVABILITY.md" in f.read()
 
 
 def test_architecture_doc_exists_and_linked():

@@ -104,6 +104,35 @@ def test_engine_matches_unbatched_reference(model):
         assert by_rid[i].tokens_out == ref, f"request {i} diverged"
 
 
+def test_shrink_while_busy_stays_on_warmed_geometry(model):
+    """Shrinking max_batch below the live count must not allocate a pool
+    sized to the live set: that transient geometry is outside the knob
+    space, so its decode executables were never warm-started and the
+    reconfig window pays cold compiles.  The slot count holds at the old
+    (warmed) value until the backlog drains, then the deferred shrink in
+    step() lands directly on the target geometry."""
+    cfg, params = model
+    lens, max_new = [5, 9, 12], 8
+    engine = ServingEngine(params, cfg, _setting(max_batch=4), max_seq=48)
+    for r in _requests(cfg, lens, max_new=max_new):
+        engine.submit(r)
+    for _ in range(3):
+        engine.step()
+    assert engine.n_active == 3
+    p = plan(engine.setting, _setting(max_batch=2),
+             mesh_knobs=SERVING_RELAYOUT_KNOBS)
+    assert "I-b" in p.kinds
+    engine.apply_plan(p)
+    assert engine.n_slots == 4          # held, not shrunk to len(live)=3
+    while engine.has_work():
+        engine.step()
+    assert engine.n_slots == 2          # deferred shrink completed on drain
+    by_rid = {r.rid: r for r in engine.finished}
+    for i, pl in enumerate(lens):
+        ref = _reference_generate(params, cfg, by_rid[i].prompt, max_new)
+        assert by_rid[i].tokens_out == ref, f"request {i} diverged"
+
+
 def test_relayout_preserves_live_requests(model):
     """Type I-b pool re-layout mid-flight: live slots relocate, outputs
     stay identical to the never-reconfigured reference."""
