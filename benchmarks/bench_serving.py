@@ -107,7 +107,12 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
                     # Generous cap — windows that close with only a handful
                     # of quanta give the GP hopelessly noisy Y and the
                     # tuner thrashes
-                    window_time_s=2.0),
+                    window_time_s=2.0,
+                    # cost-aware acquisition: a candidate must amortize its
+                    # predicted switch cost within this horizon of serving
+                    # at the predicted improvement, or it is pruned before
+                    # the GP argmax
+                    amortize_horizon_s=20.0),
         objective=ServingObjective(engine, slo_p99_s=slo),
         reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
         tracer=tr_tn)
@@ -331,6 +336,9 @@ def check_report(results: dict, scenarios) -> None:
         tn = r["time_attribution"]["self_tuned"]
         assert "cost_model_calibration" in tn, \
             f"{name}: tuned attribution lacks cost-model calibration"
+        for k in ("stall_s_foreground", "stall_fraction",
+                  "stall_ms_per_reconfig"):
+            assert k in tn, f"{name}: tuned attribution lacks {k}"
         if "kernel_ablation" in r:
             for arm in ("gather", "paged"):
                 missing = [k for k in REPORT_KEYS
@@ -409,10 +417,15 @@ def main():
         ta = r["time_attribution"]["self_tuned"]
         attr_bits = ", ".join(
             f"{k} {ta['fractions'][k]:.0%}"
-            for k in ("decode", "prefill", "relayout", "recompile", "tuner")
+            for k in ("decode", "prefill", "relayout", "recompile",
+                      "migrate_bg", "recompile_bg", "tuner")
             if ta["seconds"][k] > 0)
         print(f"    attr    {attr_bits or 'n/a'} "
               f"(sum {ta['fractions_sum']:.2f})", flush=True)
+        print(f"    stall   {ta['stall_fraction']:.1%} of wall foreground "
+              f"reconfig stall "
+              f"({ta.get('stall_ms_per_reconfig', 0.0):.0f} ms/reconfig)",
+              flush=True)
         if "sharing_ablation" in r:
             abl = r["sharing_ablation"]
             print(f"    sharing {abl['share_on']['prefill_per_request']:.1f} "

@@ -51,6 +51,17 @@ for name, sc in rep["scenarios"].items():
         r = row["ratio_warm"]
         assert r is None or 0.5 <= r <= 2.0, \
             f"{name}: cost model for kind {kind} off by >2x warm (x{r})"
+    # zero-downtime gate: with staged migration + async precompile the
+    # tuned arm's foreground reconfiguration stall (synchronous relayouts,
+    # commit delta copies, cold compiles) must stay a small fraction of
+    # wall-clock — background-interleaved work is excluded by design
+    tuned = panel["self_tuned"]
+    sf = tuned["stall_fraction"]
+    assert sf < 0.10, \
+        f"{name}: foreground reconfig stall is {sf:.1%} of wall (>=10%); " \
+        f"stall_ms_per_reconfig={tuned.get('stall_ms_per_reconfig')}"
+    print(f"  {name}: stall {sf:.1%} of wall, "
+          f"{tuned.get('stall_ms_per_reconfig', 0.0):.0f} ms/reconfig")
 print(f"observability gate OK ({len(xs)} spans, "
       f"{len(rep['scenarios'])} scenario panels)")
 EOF

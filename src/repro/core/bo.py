@@ -49,6 +49,9 @@ class LossAwareBO:
         self.records: list[tuple[dict, float, float]] = []
         self.gp: GaussianProcess | None = None
         self._fits = 0
+        # cost-aware acquisition arithmetic of the most recent suggest()
+        # call (None when the legacy cost-blind path ran) — audit fodder.
+        self.last_decision: dict | None = None
 
     # ------------------------------------------------------------- observe
     def observe(self, setting: dict, loss: float, Y: float):
@@ -98,12 +101,25 @@ class LossAwareBO:
 
     # ------------------------------------------------------------- suggest
     def suggest(self, current_loss: float, current_setting: dict | None = None,
-                explored=None):
+                explored=None, cost_fn=None, horizon_s: float | None = None):
         """Returns (setting X', expected_improvement_in_seconds, mu_best).
 
         EI is converted back from log space to seconds so the caller can
         compare it against R_cost (paper §III-C).
+
+        When ``cost_fn`` (setting -> predicted switch seconds) and
+        ``horizon_s`` (remaining drift-free horizon) are given, the argmax
+        becomes cost-aware: each candidate's break-even time is
+        ``switch_cost * best_s / EI_s`` (EI is a per-horizon saving rate, so
+        this is how long the improved setting must run before the switch has
+        paid for itself), candidates whose break-even exceeds the horizon
+        are pruned outright, and the survivors are ranked by EI amortized
+        over the horizon, ``EI_s / (1 + breakeven_s / horizon_s)``.  The
+        returned ``ei_seconds`` stays the *raw* EI of the chosen candidate
+        so the caller's EI-vs-cost gate keeps its meaning; the per-candidate
+        cost arithmetic is stashed in ``self.last_decision`` for the audit.
         """
+        self.last_decision = None
         if len(self.y) < 2:
             return self.space.sample(self.rng), float("inf"), float("inf")
         self._ensure_fit()
@@ -135,11 +151,45 @@ class LossAwareBO:
             best = float(np.min(mu_b))
 
         ei_log = expected_improvement(mu, sigma, best)
-        i = int(np.argmax(ei_log))
         # convert log-EI to seconds: best_time * (1 - exp(-EI_log)) approx
         best_seconds = math.exp(best)
-        ei_seconds = best_seconds * (1.0 - math.exp(-float(ei_log[i])))
-        return cands[i], ei_seconds, best_seconds
+        ei_sec = best_seconds * (1.0 - np.exp(-ei_log))
+
+        if cost_fn is not None and horizon_s is not None and horizon_s > 0 \
+                and math.isfinite(best_seconds):
+            costs = np.asarray([max(float(cost_fn(c)), 0.0) for c in cands])
+            # break-even: EI is seconds saved per best_seconds of running
+            # time, i.e. a saving *rate* of EI/best per second — a switch
+            # costing C seconds pays for itself after C * best / EI seconds
+            # of running the improved setting.
+            with np.errstate(divide="ignore", invalid="ignore"):
+                breakeven = np.where(ei_sec > 1e-12,
+                                     costs * best_seconds / ei_sec,
+                                     np.where(costs > 0, np.inf, 0.0))
+            amortizable = breakeven <= horizon_s
+            score = ei_sec / (1.0 + breakeven / float(horizon_s))
+            n_pruned = int(np.sum(~amortizable))
+            if amortizable.any():
+                masked = np.where(amortizable, score, -np.inf)
+                i = int(np.argmax(masked))
+            else:
+                # every candidate out-costs the horizon: fall back to the
+                # amortized score so the decision stays cost-ordered, and
+                # let the caller's EI-vs-cost gate reject the switch.
+                i = int(np.argmax(score))
+            self.last_decision = {
+                "horizon_s": float(horizon_s),
+                "n_candidates": len(cands),
+                "n_pruned": n_pruned,
+                "chosen_cost_s": float(costs[i]),
+                "chosen_breakeven_s": float(breakeven[i]),
+                "chosen_raw_ei_s": float(ei_sec[i]),
+                "chosen_amortized_ei_s": float(score[i]),
+                "raw_argmax_ei_s": float(np.max(ei_sec)),
+            }
+        else:
+            i = int(np.argmax(ei_log))
+        return cands[i], float(ei_sec[i]), best_seconds
 
     def predicted_Y(self, setting: dict, loss: float) -> float:
         if len(self.y) < 2:

@@ -43,6 +43,18 @@ class LRUCache:
             self._d.popitem(last=False)
             self.evictions += 1
 
+    def absorb(self, key, value, build_s: float = 0.0):
+        """Insert an executable that was built *elsewhere* (the serving
+        engine's async precompile thread) and credit its measured build
+        time, so ``stats()`` reflects every compile regardless of which
+        thread paid for it.  Unlike ``get_or_create`` this never invokes a
+        factory and emits no span — the caller records the background time
+        through its own channel (Tracer.record).  A key already present
+        keeps its cached value (the foreground copy won the race)."""
+        if key not in self._d:
+            self.put(key, value)
+        self.build_time_s += max(float(build_s), 0.0)
+
     def get_or_create(self, key, factory: Callable):
         if key in self._d:
             self._d.move_to_end(key)

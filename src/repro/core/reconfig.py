@@ -17,6 +17,7 @@ what the online phase compares EI against (paper §III-C).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 MESH_KNOBS = ("mesh_split",)                     # Type I-b
 DATA_KNOBS = ("data_shards",)                    # Type I-a
@@ -139,25 +140,44 @@ class ReconfigCostModel:
             return self.default_cost_s
         return DEFAULT_KIND_COSTS.get(kind, 1.0)
 
-    def estimate_by_kind(self, kinds: tuple,
-                         scales: dict | None = None) -> dict:
-        """Predicted cost per kind.  A kind with a learned per-unit
+    def estimate_breakdown(self, kinds: tuple,
+                           scales: dict | None = None) -> "CostEstimate":
+        """The single derivation both the acquisition and the audit consume:
+        per-kind predicted seconds, their sum, and which kinds are still
+        priced by the uninformed seed.  A kind with a learned per-unit
         average *and* a caller-supplied current scale is priced
         ``unit_avg * scale`` — the load-aware path; everything else falls
         back to the scalar decayed average (or its seed)."""
-        out = {}
+        by_kind, seeded = {}, []
         for k in kinds:
             u = (scales or {}).get(k)
             if u and u > 0 and k in self.unit_avgs:
-                out[k] = self.unit_avgs[k] * float(u)
+                by_kind[k] = self.unit_avgs[k] * float(u)
+            elif k in self.avgs:
+                by_kind[k] = self.avgs[k]
             else:
-                out[k] = self.avgs.get(k, self._seed(k))
-        return out
+                by_kind[k] = self._seed(k)
+                seeded.append(k)
+        return CostEstimate(total_s=sum(by_kind.values()),
+                            by_kind=by_kind, seeded_kinds=tuple(seeded))
+
+    def estimate_by_kind(self, kinds: tuple,
+                         scales: dict | None = None) -> dict:
+        return self.estimate_breakdown(kinds, scales=scales).by_kind
 
     def estimate(self, kinds: tuple, scales: dict | None = None) -> float:
         if not kinds:
             return 0.0
-        return sum(self.estimate_by_kind(kinds, scales=scales).values())
+        return self.estimate_breakdown(kinds, scales=scales).total_s
+
+
+class CostEstimate(NamedTuple):
+    """Predicted reconfiguration cost: the scalar the cost gate compares
+    against EI, its per-kind breakdown (audit + acquisition read the same
+    numbers), and the kinds whose prediction is still the uninformed seed."""
+    total_s: float
+    by_kind: dict
+    seeded_kinds: tuple
 
 
 @dataclass(frozen=True)

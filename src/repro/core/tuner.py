@@ -59,6 +59,16 @@ class TunerConfig:
                                    # bare z-test would fire on ~1% noise
     drift_alpha: float = 0.3       # EWMA weight of the newest window
     drift_min_windows: int = 3     # observations before the z-test arms
+    # cost-aware acquisition (None = legacy cost-blind argmax): the
+    # amortization horizon in seconds — how long a freshly adopted setting
+    # can be expected to run before drift or the next switch invalidates
+    # it.  Each candidate's predicted switch cost is converted to a
+    # break-even time (cost * best_s / EI_s); candidates that cannot break
+    # even within the horizon are pruned before the argmax and the rest
+    # are ranked by EI amortized over the horizon, so a moderate-EI
+    # zero-cost (Type II-only, warm-executable) move beats a high-EI
+    # relayout that would spend its whole win on migration.
+    amortize_horizon_s: float | None = None
 
 
 class TuningManager:
@@ -113,6 +123,12 @@ class TuningManager:
         self._drift_var = 0.0
         self._drift_n = 0
         self.drift_events: list[dict] = []
+        # plan proposed but not yet executed: the tuner stays on the
+        # incumbent (windows keep scoring the old setting) until the
+        # driver reports the reconfiguration done via record_reconfig —
+        # which is what lets the serving engine precompile and migrate in
+        # the background over many ticks before committing the switch.
+        self._pending: rc.ReconfigPlan | None = None
 
     # ------------------------------------------------------------ metrics in
     def record_iteration(self, loss: float, time_s: float):
@@ -129,18 +145,38 @@ class TuningManager:
         seconds the executor timed directly (the serving engine's pool
         relayout), which anchor the apportionment to ground truth;
         ``scales`` the units of work each kind actually moved (relayout
-        blocks), which feed the load-aware per-unit averages."""
-        predicted = self.costs.estimate_by_kind(plan.kinds, scales=scales)
-        # kinds whose prediction is still the uninformed seed: calibration
-        # reports them separately (the model can't be graded on its prior)
-        seeded = tuple(k for k in plan.kinds if k not in self.costs.avgs)
+        blocks), which feed the load-aware per-unit averages.
+
+        Calling this also *commits* the pending plan, if this is it: the
+        incumbent flips to ``plan.new`` and a fresh window opens under the
+        new setting.  Between ``maybe_advance`` returning the plan and
+        this call the tuner deliberately stays on the old setting — the
+        serving engine uses that gap to precompile executables and migrate
+        the pool in the background across many ticks."""
+        est = self.costs.estimate_breakdown(plan.kinds, scales=scales)
         shares = self.costs.observe(plan.kinds, cost_s, measured=measured,
                                     scales=scales)
         self.repo.add_reconfig(plan.kinds, cost_s, plan.method)
-        self.audit.reconfig(kinds=plan.kinds, predicted_by_kind=predicted,
+        self.audit.reconfig(kinds=plan.kinds, predicted_by_kind=est.by_kind,
                             actual_s=cost_s, actual_by_kind=shares,
                             method=plan.method, setting=plan.new,
-                            seeded_kinds=seeded)
+                            seeded_kinds=est.seeded_kinds)
+        if self._pending is not None \
+                and setting_key(plan.new) == setting_key(self._pending.new):
+            self._pending = None
+            self._switch_to(plan.new)
+            self._a_scale = 1
+            self._next_boundary = self._iter + self.a
+
+    def abandon_reconfig(self, plan: rc.ReconfigPlan):
+        """Driver gave up on a proposed plan (e.g. the target became
+        inadmissible mid-migration): stay on the incumbent and resume
+        normal windowing as if the deliberation had chosen to stay."""
+        if self._pending is not None \
+                and setting_key(plan.new) == setting_key(self._pending.new):
+            self._pending = None
+            self._reopen_window()
+            self._next_boundary = self._iter + self.a * self._a_scale
 
     def _reconfig_scales(self) -> dict:
         """Current units-of-work per kind from the objective (e.g. blocks a
@@ -148,6 +184,17 @@ class TuningManager:
         objectives without the hook price on scalar averages."""
         fn = getattr(self.objective, "reconfig_scales", None)
         return fn() if callable(fn) else {}
+
+    def _reconfig_scales_for(self, candidate: dict) -> dict:
+        """Candidate-aware units-of-work: objectives that know which
+        switches run through the staged (background) migration report the
+        *foreground* units only — the commit delta for a stageable move,
+        the full held set otherwise.  Falls back to the load-level
+        scales."""
+        fn = getattr(self.objective, "reconfig_scales_for", None)
+        if callable(fn):
+            return fn(self.current, candidate)
+        return self._reconfig_scales()
 
     @property
     def converged(self) -> bool:
@@ -228,6 +275,11 @@ class TuningManager:
         The boundary test stays span-free — it runs every iteration; only
         an actual deliberation (window close + GP fit + EI + cost gate)
         opens the "tuner.deliberate" span."""
+        if self._pending is not None:
+            # a proposed plan is still being staged/executed by the driver;
+            # no new deliberation until it commits (record_reconfig) or is
+            # abandoned
+            return None
         if self._iter < self._next_boundary and not self._window_time_up():
             return None
         with self.tracer.span("tuner.deliberate", window=self._window_count,
@@ -241,28 +293,41 @@ class TuningManager:
         if self._init_queue:
             nxt = self._init_queue.pop(0)
             plan = self._plan(nxt)
-            scales = self._reconfig_scales()
+            scales = self._reconfig_scales_for(nxt)
+            est = self.costs.estimate_breakdown(plan.kinds, scales=scales)
             self.audit.decision(
                 window=self._window_count, phase="init", candidate=nxt,
                 incumbent=self.current, switched=True, reason="init_sample",
-                predicted_by_kind=self.costs.estimate_by_kind(
-                    plan.kinds, scales=scales),
-                predicted_cost_s=self.costs.estimate(plan.kinds,
-                                                     scales=scales))
-            self._switch_to(nxt)
-            self._next_boundary = self._iter + self.a
+                predicted_by_kind=est.by_kind,
+                predicted_cost_s=est.total_s)
+            self._pending = plan
             return plan
         if self.phase == "init":
             self.phase = "online"
 
         # ---- online tuning phase (§III-C)
         cur_loss = max(self.repo.latest_loss, self.cfg.eps * 1e-3)
-        x_new, ei_s, best_s = self.bo.suggest(cur_loss, self.current)
+        horizon = self.cfg.amortize_horizon_s
+        if horizon is not None:
+            # cost-aware acquisition: hand the BO a per-candidate switch
+            # cost (same classify + estimate_breakdown derivation the gate
+            # and the audit use) so it amortizes EI over the horizon and
+            # prunes moves that cannot break even in time
+            def cost_fn(cand, _cur=self.current):
+                kinds = rc.classify(_cur, cand, **self._knob_classes)
+                return self.costs.estimate_breakdown(
+                    kinds, scales=self._reconfig_scales_for(cand)).total_s
+            x_new, ei_s, best_s = self.bo.suggest(
+                cur_loss, self.current, cost_fn=cost_fn, horizon_s=horizon)
+        else:
+            x_new, ei_s, best_s = self.bo.suggest(cur_loss, self.current)
+        acq = getattr(self.bo, "last_decision", None)
         stay = setting_key(x_new) == setting_key(self.current)
         if not stay:
             plan = self._plan(x_new)
-            scales = self._reconfig_scales()
-            r_cost = self.costs.estimate(plan.kinds, scales=scales)
+            est = self.costs.estimate_breakdown(
+                plan.kinds, scales=self._reconfig_scales_for(x_new))
+            r_cost = est.total_s
             # hysteresis: noisy Y observations inflate EI; require the
             # improvement to also be a meaningful fraction of the predicted
             # remaining time before paying a reconfiguration
@@ -275,19 +340,16 @@ class TuningManager:
                 incumbent=self.current, switched=not stay,
                 reason="switch" if not stay else "ei_below_cost",
                 ei_s=ei_s, best_s=best_s, predicted_cost_s=r_cost,
-                predicted_by_kind=self.costs.estimate_by_kind(
-                    plan.kinds, scales=scales),
-                threshold_s=threshold)
+                predicted_by_kind=est.by_kind,
+                threshold_s=threshold, horizon_s=horizon, acquisition=acq)
             if not stay:
-                self._switch_to(x_new)
-                self._a_scale = 1
-                self._next_boundary = self._iter + self.a
+                self._pending = plan
                 return plan
         else:
             self.audit.decision(
                 window=self._window_count, phase="online", candidate=x_new,
                 incumbent=self.current, switched=False, reason="incumbent",
-                ei_s=ei_s, best_s=best_s)
+                ei_s=ei_s, best_s=best_s, horizon_s=horizon, acquisition=acq)
         # staying put: stretch the window (less BO overhead once stable,
         # back to `a` after any switch)
         self._a_scale = min(self._a_scale * 2, 16)

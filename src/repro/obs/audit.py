@@ -39,8 +39,10 @@ class TuningAudit:
                  ei_s: float | None = None, best_s: float | None = None,
                  predicted_cost_s: float | None = None,
                  predicted_by_kind: dict | None = None,
-                 threshold_s: float | None = None) -> dict:
-        return self._add({
+                 threshold_s: float | None = None,
+                 horizon_s: float | None = None,
+                 acquisition: dict | None = None) -> dict:
+        rec = {
             "type": "decision", "window": window, "phase": phase,
             "candidate": dict(candidate), "incumbent": dict(incumbent),
             "switched": bool(switched), "reason": reason,
@@ -48,7 +50,15 @@ class TuningAudit:
             "predicted_cost_s": predicted_cost_s,
             "predicted_by_kind": dict(predicted_by_kind or {}),
             "threshold_s": threshold_s,
-        })
+        }
+        if horizon_s is not None:
+            # cost-aware acquisition receipts: the amortization horizon the
+            # decision ran under plus the BO's per-candidate cost arithmetic
+            # (break-even seconds, how many candidates were pruned) — the
+            # calibration panel verifies the amortization math from these
+            rec["horizon_s"] = horizon_s
+            rec["acquisition"] = dict(acquisition or {})
+        return self._add(rec)
 
     def reconfig(self, *, kinds: tuple, predicted_by_kind: dict,
                  actual_s: float, actual_by_kind: dict, method: str,

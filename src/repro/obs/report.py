@@ -27,7 +27,15 @@ CATEGORY = {
     "reconfig.apply": "reconfig_other",  # self time: policy adoption,
                                          # cache readiness barrier
     "reconfig.relayout": "relayout",
+    "reconfig.migrate_bg": "migrate_bg",  # interleaved, latency-bounded:
+                                          # not a stall, reported apart
+    "reconfig.commit": "reconfig_other",  # self time: table swap + barrier
+                                          # (the delta copy nests as a
+                                          # reconfig.relayout child)
     "exec.build": "recompile",
+    "exec.precompile_bg": "recompile_bg",  # overlay: a worker thread's
+                                           # seconds, concurrent with the
+                                           # foreground categories
     "tuner.deliberate": "tuner",
     "train.step": "train_step",
 }
@@ -35,7 +43,21 @@ CATEGORY = {
 # the order the fractions are reported in (and the set the bench panel
 # asserts on); categories with zero observed seconds still appear
 FRACTION_KEYS = ("decode", "prefill", "admission", "relayout", "recompile",
-                 "tuner", "reconfig_other", "other")
+                 "tuner", "reconfig_other", "migrate_bg", "recompile_bg",
+                 "other")
+
+# overlay categories measure work that ran on a background thread
+# *concurrently* with the foreground categories: their seconds overlap
+# wall-clock already attributed elsewhere, so they are excluded from the
+# covered sum (else "other" would go negative and fractions_sum > 1)
+OVERLAY_KEYS = ("recompile_bg",)
+
+# the foreground switch *stall*: time the serving loop stood still for a
+# reconfiguration (synchronous relayouts + delta copies + cold compiles).
+# Background-interleaved migration batches and overlay precompiles are
+# deliberately not stalls — that exclusion is the whole point of the
+# overlapped reconfiguration pipeline, and scripts/ci.sh gates on it.
+STALL_KEYS = ("relayout", "recompile")
 
 
 def time_attribution(tracer, wall_s: float, audit=None,
@@ -58,16 +80,23 @@ def time_attribution(tracer, wall_s: float, audit=None,
         # self time lands exactly once
         seconds[cat] += e["self"]
         counts[e["name"]] = counts.get(e["name"], 0) + 1
-    covered = sum(seconds.values())
+    covered = sum(v for k, v in seconds.items() if k not in OVERLAY_KEYS)
     wall = max(float(wall_s), covered, 1e-9)   # clock-domain guard
     seconds["other"] += wall - covered
     fractions = {k: v / wall for k, v in seconds.items()}
+    stall_s = sum(seconds.get(k, 0.0) for k in STALL_KEYS)
     out = {
         "wall_s": round(wall, 4),
         "seconds": {k: round(v, 4) for k, v in seconds.items()},
         "fractions": {k: round(v, 4) for k, v in fractions.items()},
-        "fractions_sum": round(sum(fractions.values()), 4),
+        # overlay fractions overlap the foreground by construction, so the
+        # ~1.0 invariant is over the non-overlay categories only
+        "fractions_sum": round(sum(v for k, v in fractions.items()
+                                   if k not in OVERLAY_KEYS), 4),
         "span_counts": counts,
+        # foreground reconfiguration stall: what a request actually waits on
+        "stall_s_foreground": round(stall_s, 4),
+        "stall_fraction": round(stall_s / wall, 4),
     }
     if audit is not None:
         s = audit.summary()
@@ -77,6 +106,8 @@ def time_attribution(tracer, wall_s: float, audit=None,
                                   "switches": s["switches"],
                                   "stays": s["stays"]}
         out["cost_model_calibration"] = s["cost_model_calibration"]
+        out["stall_ms_per_reconfig"] = round(
+            1000.0 * stall_s / max(s["reconfigs"], 1), 3)
     return out
 
 

@@ -90,8 +90,10 @@ class SelfTuningLoop:
                 with self.tracer.span("reconfig.apply",
                                       kinds=",".join(plan.kinds)):
                     r0 = time.perf_counter()
+                    # plan.new, not tuner.current: the tuner stays on the
+                    # incumbent until record_reconfig commits the switch
                     state = self.state_adapter(state, plan)
-                    step = self._get_step(tuner.current, state, batch)
+                    step = self._get_step(plan.new, state, batch)
                     jax.block_until_ready(state)
                     rcost = time.perf_counter() - r0
                 reconfig_total += rcost

@@ -31,6 +31,7 @@ TuningManager exactly the way repro.ps.trainer wires the training job.
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -49,7 +50,7 @@ from repro.models import lm
 from repro.models.lm import ModelKnobs
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
                                  SERVING_RELAYOUT_KNOBS)
-from repro.serving.pool import make_state_pool
+from repro.serving.pool import make_state_pool, pool_dtype
 
 
 @dataclass
@@ -125,6 +126,15 @@ class ServingEngine:
         self.decode_tokens = 0             # tokens those execs produced
         self.last_reconfig_breakdown = {}  # measured per-kind s, last plan
         self.last_reconfig_scales = {}     # units migrated, last plan
+        # staged (zero-downtime) reconfiguration — begin_reconfig stages a
+        # plan, ticks precompile + migrate in the background, and a commit
+        # event is queued for the driver (serve_loop) to report to the tuner
+        self._staged: dict | None = None
+        self._reconfig_events: list[dict] = []
+        self.async_precompile = True       # False: build inline (tests)
+        self.migrate_batch_blocks = 8      # bg blocks copied per tick
+        self.migrate_drain_ticks = 200     # shrink-drain bail-out to the
+                                           # stop-the-world relayout
 
     def _reset_slots(self):
         n = self.pool.n_slots
@@ -186,7 +196,11 @@ class ServingEngine:
         the executable count; 0 = full table (ssm pools, gather path)."""
         if self.pool.kind != "paged" or self.attn_impl == "gather":
             return (0,)
-        mb = self.pool.mb
+        return self._ctx_buckets_for(self.pool.mb)
+
+    def _ctx_buckets_for(self, mb: int) -> tuple:
+        if self.attn_impl == "gather":
+            return (0,)
         g = -(-mb // 6)
         return tuple(sorted({min(t * g, mb) for t in range(1, 7)}))
 
@@ -224,6 +238,50 @@ class ServingEngine:
             return aot_compile(f, self.params, cache, tok, pos)
 
         return self._steps.get_or_create(key, build)
+
+    def _target_geometry(self, setting: dict) -> dict:
+        """The canonical paged-pool geometry ``make_state_pool(setting)``
+        lands on (n_slots = max_batch, dense-worst-case block count) —
+        what a staged migration double-buffers into and what the async
+        precompile builds executables against, so the committed pool hits
+        exactly the warmed executable keys."""
+        bs = int(setting["block_size"])
+        mb = -(-self.max_seq // bs)
+        n_slots = max(int(setting["max_batch"]), 1)
+        return {"bs": bs, "mb": mb, "n_slots": n_slots,
+                "nb": n_slots * mb + 1, "dtype": pool_dtype(setting),
+                "cache_dtype": setting.get("cache_dtype")}
+
+    def _decode_build_spec(self, cols: int, geom: dict):
+        """(LRU key, build fn) for the decode executable of a *future*
+        paged-pool geometry.  The build closes over shapes only (operands
+        are ShapeDtypeStructs), never the live pool — which is what makes
+        it safe to run on the async precompile thread while the tick path
+        keeps decoding."""
+        key = ("decode", self.attn_impl, cols,
+               "paged", geom["n_slots"], geom["nb"], geom["bs"],
+               geom["cache_dtype"])
+        cfg, ms, params = self.cfg, self.ms, self.params
+        kn = ModelKnobs(attn_impl=self.attn_impl, attn_ctx=cols)
+
+        def build():
+            def f(params, cache, tok, pos):
+                logits, new_cache = lm.decode_step(params, cache, tok, pos,
+                                                   cfg, ms, kn)
+                new_cache = jax.tree_util.tree_map(
+                    lambda n, o: n.astype(o.dtype), new_cache, cache)
+                return logits, new_cache
+
+            shapes = lm.init_paged_cache_shapes(cfg, geom["nb"], geom["bs"])
+            cache = {k: jax.ShapeDtypeStruct(s.shape, geom["dtype"])
+                     for k, s in shapes.items()}
+            cache["block_tables"] = jax.ShapeDtypeStruct(
+                (geom["n_slots"], geom["mb"]), jnp.int32)
+            tok = jax.ShapeDtypeStruct((geom["n_slots"], 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((geom["n_slots"],), jnp.int32)
+            return aot_compile(f, params, cache, tok, pos)
+
+        return key, build
 
     def _prefill_exec(self, bucket: int):
         key = ("prefill", bucket, self.setting["k_chunk"])
@@ -436,9 +494,9 @@ class ServingEngine:
             self._admit_acc -= budget
         else:
             self._admit_acc = 0.0
-            budget = int(self.setting["max_batch"])
+            budget = self._max_batch_cap()
         while (self.queue and budget > 0
-               and self.n_active < self.setting["max_batch"]):
+               and self.n_active < self._max_batch_cap()):
             admitted = False
             # block-aware lookahead: a long prompt whose blocks don't fit
             # yet must not strand free slots for the small requests behind it
@@ -483,10 +541,18 @@ class ServingEngine:
                         or self.slot_pos[slot] >= self.max_seq - 1):
                     self._complete(slot)
 
+        # staged reconfiguration: fold finished precompiles, copy one
+        # background-migration batch, commit when warm + fully copied
+        if self._staged is not None:
+            self._advance_staged()
+
         # a shrink that had to wait for live slots (relayout keeps every
         # in-flight request) completes once the backlog drains; otherwise
-        # decode keeps paying for an oversized pool
-        if (self.pool.n_slots > self.setting["max_batch"]
+        # decode keeps paying for an oversized pool.  Deferred while a
+        # staged reconfiguration is in flight — its commit lands the pool
+        # on the target geometry itself.
+        if (self._staged is None
+                and self.pool.n_slots > self.setting["max_batch"]
                 and self.n_active <= self.setting["max_batch"]):
             self._relayout_pool()
 
@@ -630,18 +696,247 @@ class ServingEngine:
         for cols in self._ctx_buckets():     # warm before the next tick
             self._decode_exec(cols)
 
+    # ------------------------------------ staged (zero-downtime) reconfig
+    def _max_batch_cap(self) -> int:
+        """Admission ceiling.  While a staged shrink is in flight the cap
+        is the *target* max_batch, not the incumbent's — otherwise new
+        admissions keep refilling the slots the migration is waiting to
+        drain and the commit never becomes legal."""
+        cap = int(self.setting["max_batch"])
+        if self._staged is not None:
+            cap = min(cap, int(self._staged["target"]["max_batch"]))
+        return max(cap, 1)
+
+    def _live_extents(self) -> dict:
+        """{slot: (written, reserved)} for every live request — what both
+        relayout and staged-migration commit preserve."""
+        out = {}
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            written = int(self.slot_pos[slot])    # state valid for [0, w)
+            reserved = min(len(req.prompt) + req.max_new, self.max_seq)
+            out[slot] = (written, reserved)
+        return out
+
+    def _hot_blocks(self) -> set:
+        """Blocks the very next decode tick will write: each live slot's
+        current tail block.  Background-copying them is wasted device
+        traffic — they are dirtied again one tick later — so the migration
+        loop skips them and they ride the commit-time delta instead."""
+        hot: set = set()
+        if self.pool.kind != "paged":
+            return hot
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            col = min(int(self.slot_pos[s]) // self.pool.bs,
+                      self.pool.mb - 1)
+            hot.add(int(self.pool.tables[s, col]))
+        hot.discard(0)
+        return hot
+
+    def begin_reconfig(self, plan: ReconfigPlan):
+        """Stage a zero-downtime switch to ``plan.new``.  The incumbent
+        setting keeps serving; between ticks the engine (1) folds decode
+        executables for the target geometry built by an async worker and
+        (2) copies cold held blocks into a double-buffered pool, then
+        commits atomically once both are done (``_advance_staged``).  The
+        driver learns the outcome through ``take_reconfig_events`` — the
+        tuner's pending plan is only confirmed at commit.  One staged plan
+        at a time; a newer one supersedes (drops) an in-flight one."""
+        if self._staged is not None:
+            self.cancel_staged()
+        target = dict(self.setting)
+        target.update(plan.new)
+        kinds = rc_classify(self.setting, plan.new,
+                            mesh_knobs=SERVING_RELAYOUT_KNOBS)
+        st = {"plan": plan, "target": target, "kinds": kinds,
+              "t0": time.perf_counter(),
+              "builds": [], "folded": 0, "done_building": False,
+              "thread": None, "cancelled": False,
+              "incremental": None, "drain_ticks": 0,
+              "bg_migrate_s": 0.0, "bg_precompile_s": 0.0}
+        specs = []
+        if self.pool.kind == "paged" and self.attn_impl != "gather":
+            geom = self._target_geometry(target)
+            for cols in self._ctx_buckets_for(geom["mb"]):
+                key, build = self._decode_build_spec(cols, geom)
+                if key not in self._steps:
+                    specs.append((key, build))
+        self._staged = st
+        if not specs:
+            st["done_building"] = True
+        elif self.async_precompile:
+            th = threading.Thread(target=self._precompile_worker,
+                                  args=(st, specs), daemon=True)
+            st["thread"] = th
+            th.start()
+        else:
+            self._precompile_worker(st, specs)
+
+    def _precompile_worker(self, st: dict, specs: list):
+        """Build the staged target's missing executables off the tick
+        path.  The worker only measures and appends to ``st["builds"]``
+        (list.append is atomic under the GIL) — it never touches the LRU
+        or the tracer's span stack; the main thread folds results in
+        ``_advance_staged`` via ``LRUCache.absorb`` + ``Tracer.record``."""
+        for key, build in specs:
+            if st["cancelled"]:
+                return
+            t0 = time.perf_counter()
+            try:
+                ex = build()
+            except Exception:
+                ex = None        # commit falls back to a foreground build
+            st["builds"].append((key, ex, time.perf_counter() - t0))
+        st["done_building"] = True
+
+    def _advance_staged(self):
+        """One between-ticks quantum of the staged pipeline: fold finished
+        background builds, copy one bounded batch of cold blocks, commit
+        when warm + copied + (for a shrink) drained."""
+        st = self._staged
+        builds = st["builds"]
+        while st["folded"] < len(builds):
+            key, ex, dur = builds[st["folded"]]
+            st["folded"] += 1
+            st["bg_precompile_s"] += dur
+            if ex is not None:
+                self._steps.absorb(key, ex, dur)
+                self.tr.record("exec.precompile_bg", dur, key=str(key))
+        warm = st["done_building"] and st["folded"] == len(st["builds"])
+
+        if st["incremental"] is None:
+            st["incremental"] = (self.pool.kind == "paged"
+                                 and "I-b" in st["kinds"]
+                                 and self.pool.begin_migration(st["target"]))
+        elif (st["incremental"]
+              and getattr(self.pool, "_mig", None) is None):
+            st["incremental"] = False    # externally relaid out mid-flight
+
+        pending = 0
+        if st["incremental"]:
+            skip = self._hot_blocks()
+            if self.pool.migration_pending(skip=skip) > 0:
+                with self.tr.span("reconfig.migrate_bg",
+                                  batch=self.migrate_batch_blocks):
+                    t0 = time.perf_counter()
+                    pending = self.pool.migration_step(
+                        self.migrate_batch_blocks, skip=skip)
+                    st["bg_migrate_s"] += time.perf_counter() - t0
+
+        if not warm or pending > 0:
+            return
+        if (st["incremental"]
+                and self.n_active > int(st["target"]["max_batch"])):
+            # shrink: wait for the admission cap to drain the live set
+            # below the target slot count; a backlog that refuses to
+            # drain bails out to the stop-the-world fallback (whose
+            # shrink-deferral keeps the old geometry until it can)
+            st["drain_ticks"] += 1
+            if st["drain_ticks"] < self.migrate_drain_ticks:
+                return
+        self._commit_staged()
+
+    def _commit_staged(self):
+        """Atomic adoption of the staged reconfiguration.  The only
+        foreground work left is the delta copy (blocks dirtied since
+        their background copy) + table swap + warmup barrier — the
+        stall the overlapped pipeline exists to minimize."""
+        st = self._staged
+        plan = st["plan"]
+        with self.tr.span("reconfig.commit", kinds=",".join(st["kinds"])):
+            t0 = time.perf_counter()
+            self.setting.update(plan.new)
+            relayout_s = 0.0
+            committed = False          # True = incremental commit succeeded
+            if "I-b" in st["kinds"]:
+                r0 = time.perf_counter()
+                if (st["incremental"]
+                        and getattr(self.pool, "_mig", None) is not None):
+                    with self.tr.span("reconfig.relayout",
+                                      live=self.n_active, staged=True):
+                        mapping = self.pool.finish_migration(
+                            self._live_extents())
+                    if mapping is not None:
+                        old_req, old_pos, old_tok = (
+                            self.slot_req, self.slot_pos, self.slot_tok)
+                        self._reset_slots()
+                        for old, new in mapping.items():
+                            self.slot_req[new] = old_req[old]
+                            self.slot_pos[new] = old_pos[old]
+                            self.slot_tok[new] = old_tok[old]
+                        self.metrics.counter("pool.relayouts").inc()
+                        committed = True
+                    else:
+                        self.pool.abort_migration()
+                if not committed:          # fallback: stop-the-world
+                    self._relayout_pool()
+                relayout_s = time.perf_counter() - r0
+            else:
+                if st["incremental"]:      # defensive: II-only plans never
+                    self.pool.abort_migration()  # stage a pool migration
+                self.pool.update_policy(self.setting)
+            for cols in self._ctx_buckets():   # warm (absorbed) or build
+                self._decode_exec(cols)
+            jax.block_until_ready(self.pool.decode_cache())
+            cost = time.perf_counter() - t0
+            self.last_reconfig_breakdown = (
+                {"I-b": relayout_s} if "I-b" in st["kinds"] else {})
+            # the I-b scale the cost model learns from is the number of
+            # blocks the *foreground* actually copied: the commit delta
+            # for a staged migration, the full keep set for the fallback.
+            # Teaching it delta-cost/keep-blocks would poison the per-unit
+            # average — the next non-stageable (re-block) switch would be
+            # predicted ~free and blow the calibration gate.
+            fg_blocks = (getattr(self.pool, "last_migration_delta_blocks", 0)
+                         if committed
+                         else self.pool.last_relayout_blocks)
+            self.last_reconfig_scales = (
+                {"I-b": max(int(fg_blocks), 1)}
+                if "I-b" in st["kinds"] else {})
+            self._reconfig_events.append({
+                "plan": plan, "cost_s": cost,
+                "measured": dict(self.last_reconfig_breakdown),
+                "scales": dict(self.last_reconfig_scales),
+                "bg_migrate_s": st["bg_migrate_s"],
+                "bg_precompile_s": st["bg_precompile_s"],
+                "bg_blocks": getattr(self.pool,
+                                     "last_migration_bg_blocks", 0),
+                "delta_blocks": getattr(self.pool,
+                                        "last_migration_delta_blocks", 0),
+                "staged_wall_s": time.perf_counter() - st["t0"],
+            })
+        self._staged = None
+
+    def take_reconfig_events(self) -> list[dict]:
+        """Drain committed-reconfiguration events (driver → tuner)."""
+        ev, self._reconfig_events = self._reconfig_events, []
+        return ev
+
+    def cancel_staged(self):
+        """Drop an in-flight staged reconfiguration (run teardown, or a
+        newer proposal superseding it).  Returns the abandoned plan so
+        the driver can tell the tuner to reopen its window, or None."""
+        st = self._staged
+        if st is None:
+            return None
+        st["cancelled"] = True
+        th = st["thread"]
+        if th is not None and th.is_alive():
+            th.join(timeout=60.0)
+        if st["incremental"] and getattr(self.pool, "_mig", None) is not None:
+            self.pool.abort_migration()
+        self._staged = None
+        return st["plan"]
+
     def _relayout_pool(self):
         with self.tr.span("reconfig.relayout",
                           live=self.n_active,
                           block_size=self.setting.get("block_size"),
                           max_batch=self.setting.get("max_batch")):
-            live_extents = {}
-            for slot, req in enumerate(self.slot_req):
-                if req is None:
-                    continue
-                written = int(self.slot_pos[slot])  # state valid for [0, w)
-                reserved = min(len(req.prompt) + req.max_new, self.max_seq)
-                live_extents[slot] = (written, reserved)
+            live_extents = self._live_extents()
             old_req, old_pos, old_tok = (self.slot_req, self.slot_pos,
                                          self.slot_tok)
             # a shrink below the live set must not land the pool on a
@@ -689,6 +984,35 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
     reconfig_total_s = 0.0
     timeline = []                 # (t, total_tokens, load) every ~50 quanta
     busy_ticks = 0
+
+    def _drain_reconfig_events():
+        """Report staged commits to the tuner (confirming its pending
+        plan) and log them; the cost it learns is the *foreground* commit
+        stall — background migrate/precompile seconds ride along for the
+        bench panel but never enter the cost model."""
+        nonlocal reconfig_total_s
+        for ev in engine.take_reconfig_events():
+            tuner.record_reconfig(
+                ev["plan"], ev["cost_s"], measured=ev["measured"],
+                scales=ev["scales"])
+            reconfig_total_s += ev["cost_s"]
+            reconfigs.append({
+                "t": round(time.perf_counter() - t_start, 3),
+                "kinds": list(ev["plan"].kinds),
+                "cost_s": round(ev["cost_s"], 4),
+                "bg_migrate_s": round(ev["bg_migrate_s"], 4),
+                "bg_precompile_s": round(ev["bg_precompile_s"], 4),
+                "bg_blocks": ev["bg_blocks"],
+                "delta_blocks": ev["delta_blocks"],
+                "staged_wall_s": round(ev["staged_wall_s"], 4),
+                "setting": dict(ev["plan"].new)})
+            if verbose:
+                print(f"[reconfig@{reconfigs[-1]['t']:.1f}s] "
+                      f"{ev['plan'].kinds} -> {ev['plan'].new} "
+                      f"(commit {ev['cost_s']:.3f}s, "
+                      f"bg {ev['bg_migrate_s'] + ev['bg_precompile_s']:.2f}s)",
+                      flush=True)
+
     while pending or engine.has_work():
         now = time.perf_counter() - t_start
         if max_wall_s is not None and now > max_wall_s:
@@ -696,6 +1020,10 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         while pending and pending[0].arrival_s <= now:
             engine.submit(pending.popleft(), now=now)
         tick = engine.step(now=now)
+        if tuner is not None:
+            # commits can land on any tick (idle ones included) — report
+            # them before deciding whether to skip the tuner bookkeeping
+            _drain_reconfig_events()
         if tick["idle"]:
             # nothing in flight and nothing arrived: wait for traffic
             if pending:
@@ -710,20 +1038,19 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
             tuner.record_iteration(float(tick["load"]), tick["dt"])
             plan = tuner.maybe_advance()
             if plan is not None:
-                cost = engine.apply_plan(plan)
-                tuner.record_reconfig(
-                    plan, cost, measured=engine.last_reconfig_breakdown,
-                    scales=engine.last_reconfig_scales)
-                reconfig_total_s += cost
-                reconfigs.append({
-                    "t": round(time.perf_counter() - t_start, 3),
-                    "kinds": list(plan.kinds), "cost_s": round(cost, 4),
-                    "setting": dict(plan.new)})
-                if verbose:
-                    print(f"[reconfig@{reconfigs[-1]['t']:.1f}s] "
-                          f"{plan.kinds} -> {plan.new} ({cost:.2f}s)",
-                          flush=True)
+                # stage, don't stall: the engine keeps serving while the
+                # target's executables precompile and its pool migrates in
+                # the background; the tuner holds the plan pending until
+                # the commit event confirms it
+                engine.begin_reconfig(plan)
     wall = time.perf_counter() - t_start
+    # a plan still staged at run end never committed: tear it down and
+    # let the tuner reopen the window it froze for the proposal
+    leftover = engine.cancel_staged()
+    if tuner is not None:
+        _drain_reconfig_events()
+        if leftover is not None:
+            tuner.abandon_reconfig(leftover)
     done = engine.finished[fin0:]
     tokens = engine.total_tokens - tok0
     lats = [r.latency_s for r in done]

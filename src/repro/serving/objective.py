@@ -83,3 +83,21 @@ class ServingObjective:
         snap = self.engine.pool.snapshot()
         units = snap.get("blocks_held", snap.get("live_slots", 0))
         return {"I-b": max(int(units), 1)}
+
+    def reconfig_scales_for(self, current: dict, candidate: dict) -> dict:
+        """Candidate-aware variant: the units the switch would copy in the
+        *foreground*.  A same-block-size paged switch runs through the
+        staged migration — only the commit delta (≈ each live slot's hot
+        tail block) stalls the loop — while a block-size change re-blocks
+        every held block stop-the-world.  Pricing both at the full held
+        set would make the cost-aware acquisition see staged (near-free)
+        moves as expensive as re-blocking ones."""
+        snap = self.engine.pool.snapshot()
+        held = snap.get("blocks_held", snap.get("live_slots", 0))
+        if (self.engine.pool.kind == "paged"
+                and int(candidate.get("block_size", 0))
+                == int(current.get("block_size", 0))):
+            units = snap.get("live_slots", 1)
+        else:
+            units = held
+        return {"I-b": max(int(units), 1)}

@@ -24,6 +24,7 @@ queue is never quiesced, and every in-flight request keeps its tokens.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -120,6 +121,13 @@ class PagedKVPool(StatePool):
         self.shared_blocks_hit = 0
         self.cow_copies = 0
         self.cache_evictions = 0
+        # staged (double-buffered) migration state — see begin_migration
+        self._mig = None
+        self._mig_remap: dict[int, int] = {}
+        self._mig_copied: set[int] = set()
+        self._mig_next = 1
+        self.last_migration_bg_blocks = 0     # copied off the commit path
+        self.last_migration_delta_blocks = 0  # copied inside the commit
         self._alloc(n_slots or setting["max_batch"])
 
     @property
@@ -208,9 +216,20 @@ class PagedKVPool(StatePool):
         }
 
     # ------------------------------------------------------- block plumbing
+    def _mig_mark(self, block: int):
+        """A block is about to be (re)written: any staged-migration copy of
+        it is stale.  Every mutation path funnels through a host-side hook
+        (_alloc_block reuse, prepare_write COW + in-range writes, write_kv)
+        before the device write, so the background copy can never miss an
+        update — the block simply rejoins the to-copy set."""
+        if self._mig is not None:
+            self._mig_copied.discard(block)
+
     def _alloc_block(self) -> int | None:
         if self._free:
-            return self._free.pop()
+            b = self._free.pop()
+            self._mig_mark(b)
+            return b
         # evict the least-recently-touched cached block with refcount 0
         cands = [b for b in self.block_key if self.ref[b] == 0]
         if not cands:
@@ -218,6 +237,7 @@ class PagedKVPool(StatePool):
         victim = min(cands, key=lambda b: self._touch.get(b, 0))
         self._uncache(victim)
         self.cache_evictions += 1
+        self._mig_mark(victim)
         return victim
 
     def _uncache(self, block: int):
@@ -331,6 +351,7 @@ class PagedKVPool(StatePool):
         [start, end) is copied into a private block first."""
         for lb in range(start // self.bs, -(-end // self.bs)):
             b = int(self.tables[slot, lb])
+            self._mig_mark(b)     # caller writes [start, end) after this
             if self.ref[b] <= 1:
                 continue
             nb = self._alloc_block()
@@ -348,6 +369,8 @@ class PagedKVPool(StatePool):
         starting at logical position ``start``."""
         n = next(iter(kv.values())).shape[1]
         pos = np.arange(start, start + n)
+        for b in set(self.tables[slot, pos // self.bs].tolist()):
+            self._mig_mark(b)
         blk = jnp.asarray(self.tables[slot, pos // self.bs])
         off = jnp.asarray(pos % self.bs)
         for k, rows in kv.items():
@@ -388,6 +411,8 @@ class PagedKVPool(StatePool):
         each live slot's logical KV is re-blocked (the prefix cache cannot
         survive — its keys are per-block-geometry — so it resets).
         Returns {old_slot: new_slot}."""
+        if self._mig is not None:      # staged migration superseded
+            self.abort_migration()
         old_bs = self.bs
         old_kv, old_tables = self.kv, self.tables
         old_blocks = {s: list(bl) for s, bl in enumerate(self.slot_blocks)}
@@ -454,8 +479,15 @@ class PagedKVPool(StatePool):
             self.last_relayout_blocks = len(keep)
         else:
             # re-block: gather each live slot dense from the old geometry,
-            # reserve new-size blocks, scatter back
+            # reserve new-size blocks, scatter back.  One host-side pass —
+            # per-slot jnp ``.at[].set`` would copy the whole pool array
+            # per slot *and* XLA-compile per distinct ``written`` length,
+            # turning a block-size switch into the dominant reconfig stall
             self.last_relayout_blocks = 0
+            old_host = {k: np.asarray(v) for k, v in old_kv.items()}
+            new_host = {k: np.zeros(v.shape, v.dtype)
+                        for k, v in self.kv.items()}
+            touched = False
             for s in live:
                 written, reserved = live_extents[s]
                 ns = mapping[s]
@@ -472,16 +504,18 @@ class PagedKVPool(StatePool):
                 self.last_relayout_blocks += len(blocks)
                 if written == 0:
                     continue
-                bt = jnp.asarray(old_tables[s])
+                touched = True
+                bt = np.asarray(old_tables[s])
                 pos = np.arange(written)
-                blk = jnp.asarray(np.asarray(self.tables[ns])[pos // self.bs])
-                off = jnp.asarray(pos % self.bs)
-                for k in self.kv:
-                    L, _, obs, K, hd = old_kv[k].shape
-                    g = old_kv[k][:, bt].reshape(L, self.mb_of(obs) * obs,
-                                                 K, hd)[:, :written]
-                    self.kv[k] = self.kv[k].at[:, blk, off].set(
-                        g.astype(self.kv[k].dtype))
+                blk = np.asarray(self.tables[ns])[pos // self.bs]
+                off = pos % self.bs
+                for k in new_host:
+                    L, _, obs, K, hd = old_host[k].shape
+                    g = old_host[k][:, bt].reshape(L, self.mb_of(obs) * obs,
+                                                   K, hd)[:, :written]
+                    new_host[k][:, blk, off] = g.astype(new_host[k].dtype)
+            if touched:
+                self.kv = {k: jnp.asarray(v) for k, v in new_host.items()}
         # the budget floor only has to hold while live data is being
         # migrated (rebalance never reclaims held blocks); once the live
         # set owns its blocks, the configured overcommit budget governs
@@ -491,6 +525,186 @@ class PagedKVPool(StatePool):
         self._rebalance_budget()
         self._place()
         return mapping
+
+    # ------------------------------------------- staged (overlapped) migration
+    # A Type I-b relayout split into background batches: begin_migration
+    # allocates the target arrays (the double buffer), migration_step copies
+    # bounded batches of held blocks between engine ticks while the old
+    # geometry keeps decoding, and finish_migration copies only the blocks
+    # dirtied since their background copy (the delta), rebuilds the tables,
+    # and atomically adopts the new arrays.  Correctness rests on two
+    # invariants: every write path marks its blocks via _mig_mark *before*
+    # the device write (so a copied block that mutates simply rejoins the
+    # to-copy set), and the old arrays are never modified by the copies
+    # themselves (relocate_rows reads old, writes new).
+
+    def begin_migration(self, new_setting: dict) -> bool:
+        """Stage a migration into ``new_setting``'s canonical geometry
+        (n_slots = max_batch — the geometry warm_start compiled decode
+        executables for).  Returns False when the move cannot run
+        incrementally — a block-size change re-blocks every row, so the
+        caller falls back to the stop-the-world relayout."""
+        assert self._mig is None, "migration already staged"
+        if int(new_setting["block_size"]) != self.bs:
+            return False
+        n_slots = max(int(new_setting["max_batch"]), 1)
+        nb = n_slots * self.mb + 1
+        setting = dict(new_setting)
+        dt = pool_dtype(setting)
+        shapes = lm.init_paged_cache_shapes(self.cfg, nb, self.bs)
+        self._mig = {
+            "setting": setting,
+            "kv": {k: jnp.zeros(s.shape, dt) for k, s in shapes.items()},
+            "nb": nb, "n_slots": n_slots,
+        }
+        self._mig_remap = {}
+        self._mig_copied = set()
+        self._mig_next = 1
+        self.last_migration_bg_blocks = 0
+        return True
+
+    def _held_blocks(self) -> list[int]:
+        """Blocks the pool is responsible for migrating: referenced by a
+        live slot or registered in the prefix cache."""
+        refd = (np.nonzero(self.ref[1:] > 0)[0] + 1).tolist()
+        return sorted(set(refd) | set(self.block_key))
+
+    def migration_pending(self, skip=()) -> int:
+        """Held blocks still awaiting a clean background copy (excluding
+        ``skip`` — the caller's hot set, which would be dirtied again next
+        tick and is deferred to the commit delta)."""
+        mig = self._mig
+        return sum(1 for b in self._held_blocks()
+                   if b not in self._mig_copied and b not in skip
+                   and (b in self._mig_remap or self._mig_next < mig["nb"]))
+
+    def migration_step(self, max_blocks: int = 8, skip=()) -> int:
+        """Copy up to ``max_blocks`` cold held blocks into the staged
+        arrays; returns how many assignable blocks remain uncopied.  Blocks
+        the target has no row for (a shrink holding more cache than the new
+        budget) are left to finish_migration, which drops or delta-copies
+        them under the final budget."""
+        assert self._mig is not None
+        mig = self._mig
+        todo = [b for b in self._held_blocks()
+                if b not in self._mig_copied and b not in skip]
+        batch = []
+        for b in todo:
+            if len(batch) >= max_blocks:
+                break
+            if b not in self._mig_remap:
+                if self._mig_next >= mig["nb"]:
+                    continue          # no target row yet: commit-time work
+                self._mig_remap[b] = self._mig_next
+                self._mig_next += 1
+            batch.append(b)
+        if batch:
+            mig["kv"] = relocate_rows(
+                self.kv, mig["kv"], batch,
+                [self._mig_remap[b] for b in batch], axis=1)
+            jax.block_until_ready(mig["kv"])
+            self._mig_copied.update(batch)
+            self.last_migration_bg_blocks += len(batch)
+        return self.migration_pending(skip=skip)
+
+    def finish_migration(self, live_extents: dict) -> dict | None:
+        """Atomic swap: delta-copy every kept block whose background copy
+        is missing or stale, rebuild tables/refcounts/prefix keys against
+        the staged arrays, and adopt them.  Returns {old_slot: new_slot},
+        or None when the live set no longer fits the staged geometry (the
+        caller aborts and falls back to the stop-the-world relayout, whose
+        shrink-deferral handles the oversubscribed case)."""
+        assert self._mig is not None
+        mig = self._mig
+        live = sorted(live_extents)
+        if len(live) > mig["n_slots"]:
+            return None
+
+        # keep list, exactly as the stop-the-world relayout orders it:
+        # live blocks in slot order, then cached blocks by recency within
+        # the new overcommit budget
+        keep, seen = [], set()
+        for s in live:
+            for b in self.slot_blocks[s]:
+                if b not in seen:
+                    seen.add(b)
+                    keep.append(b)
+        cached = sorted((b for b in self.block_key
+                         if self.ref[b] == 0 and b not in seen),
+                        key=lambda b: -self._touch.get(b, 0))
+        oc = float(mig["setting"].get("block_overcommit", 1.0))
+        usable = min(mig["nb"] - 1,
+                     max(int(np.ceil(mig["n_slots"] * self.mb * oc)),
+                         len(keep)))
+        budget = usable - len(keep)
+        dropped = cached[max(budget, 0):]
+        self.cache_evictions += len(dropped)
+        keep.extend(cached[:max(budget, 0)])
+
+        # final id assignment: clean background copies keep their row,
+        # everything else takes a row not used by a kept clean copy
+        used = {self._mig_remap[b] for b in keep
+                if b in self._mig_remap and b in self._mig_copied}
+        free_ids = (i for i in range(1, mig["nb"]) if i not in used)
+        remap, delta = {}, []
+        for b in keep:
+            if b in self._mig_remap and b in self._mig_copied:
+                remap[b] = self._mig_remap[b]
+            else:
+                remap[b] = next(free_ids)
+                delta.append(b)
+        if delta:
+            mig["kv"] = relocate_rows(self.kv, mig["kv"], delta,
+                                      [remap[b] for b in delta], axis=1)
+        self.last_migration_delta_blocks = len(delta)
+
+        old_blocks = {s: list(self.slot_blocks[s]) for s in live}
+        old_key = dict(self.block_key)
+        old_touch = dict(self._touch)
+        mapping = {s: i for i, s in enumerate(live)}
+
+        # adopt the staged arrays + geometry
+        self.setting = mig["setting"]
+        self.n_slots = mig["n_slots"]
+        self.nb = mig["nb"]
+        self.kv = mig["kv"]
+        self.ref = np.zeros(self.nb, np.int32)
+        self.ref[TRASH_BLOCK] = 1
+        self.tables = np.zeros((self.n_slots, self.mb), np.int32)
+        self.slot_blocks = [[] for _ in range(self.n_slots)]
+        self.slot_live = [False] * self.n_slots
+        self.prefix, self.block_key, self._touch = {}, {}, {}
+        for s in live:
+            ns = mapping[s]
+            self.slot_blocks[ns] = [remap[b] for b in old_blocks[s]]
+            self.tables[ns, :len(self.slot_blocks[ns])] = \
+                self.slot_blocks[ns]
+            self.slot_live[ns] = True
+            for b in self.slot_blocks[ns]:
+                self.ref[b] += 1
+        for b, key in old_key.items():
+            if b in remap:
+                nb_ = remap[b]
+                self.block_key[nb_] = key
+                self.prefix[key] = nb_
+                self._touch[nb_] = old_touch.get(b, 0)
+        self._tick = max(old_touch.values(), default=0)
+        held = set(remap.values())
+        self._free = set()
+        self._reserved = set(range(1, self.nb)) - held
+        self._budget_floor = 0
+        self._rebalance_budget()
+        self._place()
+        self.last_relayout_blocks = len(keep)
+        self._mig = None
+        self._mig_remap, self._mig_copied = {}, set()
+        return mapping
+
+    def abort_migration(self):
+        """Drop the staged arrays; the old geometry stays authoritative."""
+        self._mig = None
+        self._mig_remap, self._mig_copied = {}, set()
+        self.last_migration_bg_blocks = 0
 
     def mb_of(self, bs: int) -> int:
         return -(-self.max_seq // bs)

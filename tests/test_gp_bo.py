@@ -170,3 +170,65 @@ def test_bo_forget_setting_drops_only_target():
     assert len(bo.y) == 4
     assert all(s == {"a": 2} for s, _, _ in bo.records)
     assert bo.forget_setting({"a": 1}) == 0       # idempotent
+
+
+# ------------------------------------------------- cost-aware acquisition
+def _trained_cost_bo():
+    """GP confidently trained on Y(a): a=8 best (2s), incumbent a=1 worst
+    (9s), a=4 a solid middle (5s)."""
+    sp = KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),))
+    bo = LossAwareBO(sp, seed=0)
+    Y = {1: 9.0, 2: 7.0, 4: 5.0, 8: 2.0}
+    for _ in range(4):
+        for a, y in Y.items():
+            bo.observe({"a": a}, loss=1.0, Y=y)
+    return sp, bo
+
+
+def test_cost_aware_argmax_prefers_amortizable_candidate():
+    """A high-EI candidate whose switch cost cannot pay for itself within
+    the horizon loses to a moderate-EI zero-cost candidate; the cost-blind
+    legacy path still picks the high-EI one."""
+    _, bo = _trained_cost_bo()
+    legacy, _, _ = bo.suggest(current_loss=1.0, current_setting={"a": 1})
+    assert legacy["a"] == 8                  # EI argmax, cost-blind
+    assert bo.last_decision is None          # legacy path records nothing
+
+    costly = lambda s: 100.0 if s["a"] == 8 else 0.0
+    sugg, ei, best_s = bo.suggest(current_loss=1.0,
+                                  current_setting={"a": 1},
+                                  cost_fn=costly, horizon_s=5.0)
+    assert sugg["a"] != 8                    # pruned: breakeven >> horizon
+    assert sugg["a"] == 4                    # best surviving EI
+    d = bo.last_decision
+    assert d is not None and d["n_pruned"] >= 1
+    assert d["chosen_cost_s"] == 0.0 and d["chosen_breakeven_s"] == 0.0
+    # returned EI stays the *raw* EI of the chosen candidate (the caller's
+    # EI-vs-cost gate must keep its meaning), which the pruned a=8 beats
+    assert 0.0 < ei < d["raw_argmax_ei_s"]
+    assert np.isfinite(best_s)
+
+
+def test_cost_aware_near_zero_cost_never_starves_exploration():
+    """With negligible costs the cost-aware path must degenerate to the
+    legacy argmax: nothing pruned, same choice."""
+    _, bo = _trained_cost_bo()
+    legacy, ei_legacy, _ = bo.suggest(current_loss=1.0,
+                                      current_setting={"a": 1})
+    sugg, ei, _ = bo.suggest(current_loss=1.0, current_setting={"a": 1},
+                             cost_fn=lambda s: 1e-6, horizon_s=5.0)
+    assert sugg == legacy
+    assert bo.last_decision["n_pruned"] == 0
+    assert ei == pytest.approx(ei_legacy, rel=1e-9)
+
+
+def test_cost_aware_all_pruned_still_returns_best_amortized():
+    """Every candidate out-costing the horizon must not crash or return
+    garbage — the decision stays cost-ordered and the audit records the
+    full prune."""
+    _, bo = _trained_cost_bo()
+    sugg, ei, _ = bo.suggest(current_loss=1.0, current_setting={"a": 1},
+                             cost_fn=lambda s: 1e6, horizon_s=1.0)
+    d = bo.last_decision
+    assert d["n_pruned"] == d["n_candidates"]
+    assert sugg["a"] in (1, 2, 4, 8) and np.isfinite(ei)

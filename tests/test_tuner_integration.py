@@ -218,7 +218,9 @@ def test_window_time_budget_closes_heavy_windows():
         while len(tuner.repo.windows_list) < 2 and its < 200:
             tuner.record_iteration(1.0, t_iter)
             its += 1
-            tuner.maybe_advance()
+            plan = tuner.maybe_advance()
+            if plan is not None:        # pending-plan protocol: a proposal
+                tuner.record_reconfig(plan, 0.01)   # must be confirmed
         return its
 
     assert run(0.3) == 2        # 2 heavy iters hit the 0.5s budget
