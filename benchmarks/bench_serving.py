@@ -67,7 +67,7 @@ def calibrate_service_rate(engine, cfg) -> float:
 
 
 def run_scenario(name, engine, cfg, rate, duration, seed,
-                 tuner_a, tuner_b, slo, trace_dir=None):
+                 tuner_a, tuner_b, slo, trace_dir=None, store=None):
     from repro.core.tuner import TunerConfig, TuningManager
     from repro.obs import NOP_TRACER, Tracer, write_chrome_trace
     from repro.obs.report import time_attribution
@@ -82,6 +82,35 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
 
     out = {"rate_rps": rate, "duration_s": duration,
            "n_requests": len(trace())}
+
+    def make_tuner(tracer, absorb, sig, x0=None):
+        return TuningManager(
+            serving_knob_space(family=cfg.family),
+            x0 or DEFAULT_SERVING_SETTING,
+            TunerConfig(eps=1e-6, a=tuner_a, b=tuner_b, seed=seed,
+                        min_ei_seconds=0.5, ei_rel_threshold=0.1,
+                        # heavy-tick traffic (long prompts) must not stretch
+                        # the init phase past the workload: cap windows by
+                        # time.  Generous cap — windows that close with only
+                        # a handful of quanta give the GP hopelessly noisy Y
+                        # and the tuner thrashes
+                        window_time_s=2.0,
+                        # cost-aware acquisition: a candidate must amortize
+                        # its predicted switch cost within the horizon or be
+                        # pruned before the GP argmax; the horizon itself is
+                        # derived online from observed drift intervals (20s
+                        # stands in until the first drift)
+                        amortize_horizon_s=20.0, adapt_horizon=True),
+            objective=ServingObjective(engine, slo_p99_s=slo),
+            reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
+            tracer=tracer, store=store, signature=sig,
+            absorb_history=absorb)
+
+    sig = None
+    if store is not None:
+        from repro.store import signature_from_trace
+        sig = signature_from_trace(cfg, engine.pool.kind, engine.max_seq,
+                                   trace(), duration)
 
     # every arm starts from the default setting AND a cold prefix cache —
     # one arm's prefills must never serve another arm's admissions.  Each
@@ -98,27 +127,14 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
     engine.pool.reset_prefix_cache()
     tr_tn = Tracer()
     engine.set_tracer(tr_tn)
-    tuner = TuningManager(
-        serving_knob_space(family=cfg.family), DEFAULT_SERVING_SETTING,
-        TunerConfig(eps=1e-6, a=tuner_a, b=tuner_b, seed=seed,
-                    min_ei_seconds=0.5, ei_rel_threshold=0.1,
-                    # heavy-tick traffic (long prompts) must not stretch
-                    # the init phase past the workload: cap windows by time.
-                    # Generous cap — windows that close with only a handful
-                    # of quanta give the GP hopelessly noisy Y and the
-                    # tuner thrashes
-                    window_time_s=2.0,
-                    # cost-aware acquisition: a candidate must amortize its
-                    # predicted switch cost within this horizon of serving
-                    # at the predicted improvement, or it is pruned before
-                    # the GP argmax
-                    amortize_horizon_s=20.0),
-        objective=ServingObjective(engine, slo_p99_s=slo),
-        reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
-        tracer=tr_tn)
+    # tuned-cold: LHS-from-scratch; with a store attached it records its
+    # observations (but absorbs nothing) so the warm arm below — and any
+    # later bench run — can warm-start from them
+    tuner = make_tuner(tr_tn, absorb=False, sig=sig)
     out["self_tuned"] = serve_loop(engine, trace(), tuner)
     out["self_tuned"]["tuner_windows"] = len(tuner.history)
     out["self_tuned"]["drift_events"] = len(tuner.drift_events)
+    tuner.close_store()
     engine.set_tracer(NOP_TRACER)       # ablations below run untraced
 
     out["time_attribution"] = {
@@ -127,6 +143,56 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
         "self_tuned": time_attribution(
             tr_tn, out["self_tuned"]["wall_s"], audit=tuner.audit),
     }
+
+    if store is not None:
+        # tuned-warm third arm: same trace, same tuner config, but the BO
+        # is seeded from the store (the cold arm's observations at minimum)
+        # and the start setting comes from the golden table — the
+        # fleet-amortization claim, measured
+        from repro.store import lookup
+        entry, gkey, gtier = lookup(store.build_golden(), sig)
+        x0 = dict(DEFAULT_SERVING_SETTING)
+        if entry is not None:
+            x0.update(entry["incumbent"]["setting"])
+        engine.reconfigure(x0)
+        engine.pool.reset_prefix_cache()
+        tr_wm = Tracer()
+        engine.set_tracer(tr_wm)
+        tuner_w = make_tuner(tr_wm, absorb=True, sig=sig, x0=x0)
+        out["self_tuned_warm"] = serve_loop(engine, trace(), tuner_w)
+        out["self_tuned_warm"]["tuner_windows"] = len(tuner_w.history)
+        out["self_tuned_warm"]["drift_events"] = len(tuner_w.drift_events)
+        tuner_w.close_store()
+        engine.set_tracer(NOP_TRACER)
+        out["time_attribution"]["self_tuned_warm"] = time_attribution(
+            tr_wm, out["self_tuned_warm"]["wall_s"], audit=tuner_w.audit)
+        cold, warm = out["self_tuned"], out["self_tuned_warm"]
+        attr_c = out["time_attribution"]["self_tuned"]
+        attr_w = out["time_attribution"]["self_tuned_warm"]
+        out["warm_start_gain"] = {
+            "store_key": sig.key,
+            "golden_matched_key": gkey, "golden_tier": gtier,
+            "golden_incumbent": (dict(entry["incumbent"]["setting"])
+                                 if entry else None),
+            "absorbed_obs": warm["warm_start"]["absorbed_obs"],
+            "init_quanta_cold": cold["tuner_init_quanta"],
+            "init_quanta_warm": warm["tuner_init_quanta"],
+            "init_time_s_cold": cold["tuner_init_time_s"],
+            "init_time_s_warm": warm["tuner_init_time_s"],
+            "init_quanta_halved": (2 * warm["tuner_init_quanta"]
+                                   <= cold["tuner_init_quanta"]),
+            "tokens_per_s_cold": cold["tokens_per_s"],
+            "tokens_per_s_warm": warm["tokens_per_s"],
+            "gain": (warm["tokens_per_s"]
+                     / max(cold["tokens_per_s"], 1e-9)),
+            "warm_wins": warm["tokens_per_s"] >= cold["tokens_per_s"],
+            # where the saved init quanta went: the tuner/decode split of
+            # each arm's attribution panel
+            "tuner_fraction_cold": attr_c["fractions"]["tuner"],
+            "tuner_fraction_warm": attr_w["fractions"]["tuner"],
+            "decode_fraction_cold": attr_c["fractions"]["decode"],
+            "decode_fraction_warm": attr_w["fractions"]["decode"],
+        }
     if trace_dir is not None:
         import os
         path = os.path.join(trace_dir, f"trace_{name}.json")
@@ -339,6 +405,27 @@ def check_report(results: dict, scenarios) -> None:
         for k in ("stall_s_foreground", "stall_fraction",
                   "stall_ms_per_reconfig"):
             assert k in tn, f"{name}: tuned attribution lacks {k}"
+        if "self_tuned_warm" in r:
+            missing = [k for k in REPORT_KEYS
+                       if k not in r["self_tuned_warm"]]
+            assert not missing, f"{name}/self_tuned_warm missing {missing}"
+            assert (r["self_tuned_warm"]["completed"]
+                    == r["self_tuned_warm"]["requests"]), \
+                f"{name}: warm arm dropped requests"
+            g = r["warm_start_gain"]
+            for k in ("store_key", "golden_tier", "absorbed_obs",
+                      "init_quanta_cold", "init_quanta_warm",
+                      "init_time_s_cold", "init_time_s_warm", "gain",
+                      "warm_wins", "tuner_fraction_cold",
+                      "tuner_fraction_warm"):
+                assert k in g, f"{name}: warm_start_gain missing {k}"
+            assert g["absorbed_obs"] > 0, \
+                f"{name}: warm arm absorbed no observations — the store " \
+                f"round-trip is broken"
+            ws = r["self_tuned_warm"].get("warm_start", {})
+            assert ws.get("tier") == "exact", \
+                f"{name}: warm arm matched tier {ws.get('tier')!r}, not " \
+                f"the exact signature the cold arm just wrote"
         if "kernel_ablation" in r:
             for arm in ("gather", "paged"):
                 missing = [k for k in REPORT_KEYS
@@ -368,6 +455,18 @@ def main():
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
                     help="also write a Perfetto-loadable Chrome trace of "
                          "each scenario's tuned arm to DIR/trace_NAME.json")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="add a tuned-warm third arm per scenario: the "
+                         "cold arm persists its observations to a fresh "
+                         "tuning store, the warm arm re-runs the trace "
+                         "seeded from them (golden x0 + absorbed GP "
+                         "history), and a warm_start_gain panel lands in "
+                         "the report; the merged golden table is exported "
+                         "to artifacts/tuning/")
+    ap.add_argument("--store-dir", default=None, metavar="DIR",
+                    help="tuning-store directory for --warm-start "
+                         "(default: a fresh artifacts/bench/tuning_store, "
+                         "wiped per run so the cold arm stays cold)")
     args = ap.parse_args()
 
     from repro.configs.registry import get_config
@@ -398,6 +497,17 @@ def main():
 
     results = {"arch": cfg.name, "smoke": args.smoke or args.ci,
                "calibrated_base_tokps": base_tokps, "scenarios": {}}
+    store = None
+    if args.warm_start:
+        import os
+        import shutil
+
+        from repro.store import TuningStore
+        store_dir = args.store_dir or os.path.join(
+            "artifacts", "bench", "tuning_store")
+        # a fresh store per bench run: the cold arm must be genuinely cold
+        shutil.rmtree(store_dir, ignore_errors=True)
+        store = TuningStore(store_dir)
     t0 = time.perf_counter()
     if args.trace_dir:
         import os
@@ -406,7 +516,7 @@ def main():
         print(f"--- scenario {name}", flush=True)
         r = run_scenario(name, engine, cfg, rate, duration, args.seed,
                          tuner_a, tuner_b, slo=3.0,
-                         trace_dir=args.trace_dir)
+                         trace_dir=args.trace_dir, store=store)
         results["scenarios"][name] = r
         print(f"    fixed   {r['fixed_default']['tokens_per_s']:8.1f} tok/s  "
               f"p99 {r['fixed_default']['p99_latency_s']:.2f}s")
@@ -426,6 +536,15 @@ def main():
               f"reconfig stall "
               f"({ta.get('stall_ms_per_reconfig', 0.0):.0f} ms/reconfig)",
               flush=True)
+        if "warm_start_gain" in r:
+            g = r["warm_start_gain"]
+            print(f"    warm    {g['tokens_per_s_warm']:8.1f} tok/s "
+                  f"({g['gain']:.2f}x vs cold) init "
+                  f"{g['init_quanta_warm']}/{g['init_quanta_cold']} quanta "
+                  f"{g['init_time_s_warm']:.2f}/{g['init_time_s_cold']:.2f}s "
+                  f"({g['absorbed_obs']} obs absorbed, "
+                  f"tuner {g['tuner_fraction_cold']:.1%}->"
+                  f"{g['tuner_fraction_warm']:.1%})", flush=True)
         if "sharing_ablation" in r:
             abl = r["sharing_ablation"]
             print(f"    sharing {abl['share_on']['prefill_per_request']:.1f} "
@@ -460,6 +579,27 @@ def main():
 
     wins = sum(r["tuned_wins"] for r in results["scenarios"].values())
     results["tuned_wins"] = wins
+    if store is not None:
+        # fold every arm's segments and export the golden-knobs table: the
+        # store-root copy is the machine artifact, the artifacts/tuning copy
+        # is what ci.sh gates with check_golden and what ships as the seed
+        import os
+
+        from repro.store import write_golden
+        store.compact()
+        table = store.write_golden()
+        os.makedirs(os.path.join("artifacts", "tuning"), exist_ok=True)
+        gname = ("GOLDEN_smoke.json" if (args.ci or args.smoke)
+                 else "GOLDEN.json")
+        gpath = os.path.join("artifacts", "tuning", gname)
+        write_golden(gpath, table)
+        warm_wins = sum(r["warm_start_gain"]["warm_wins"]
+                        for r in results["scenarios"].values()
+                        if "warm_start_gain" in r)
+        results["warm_start_wins"] = warm_wins
+        results["golden_path"] = gpath
+        print(f"tuned-warm >= tuned-cold on {warm_wins}/{len(scenarios)} "
+              f"scenarios; {len(table['entries'])} golden entries -> {gpath}")
     results["wall_s"] = time.perf_counter() - t0
     print(f"self-tuned >= fixed-default on {wins}/{len(scenarios)} "
           f"scenarios ({results['wall_s']:.0f}s total)")

@@ -68,6 +68,62 @@ class LossAwareBO:
             self.records = self.records[-self.max_obs:]
         self.gp = None                        # refit lazily
 
+    def absorb_history(self, obs, cap: int | None = None) -> int:
+        """Seed the GP from prior observations (fleet warm-start).
+
+        ``obs`` is an iterable of records shaped like the tuning store's
+        on-disk triples — dicts with ``setting``/``loss``/``Y`` (extra
+        keys ignored) or bare ``(setting, loss, Y)`` tuples.  Only the
+        newest ``cap`` (default: half the sliding window, so fresh local
+        evidence always has room to displace imported history) are
+        absorbed, and a record is silently skipped when its setting does
+        not encode into *this* space — same-family fallback sources may
+        carry knobs or values this run does not tune.  Returns the number
+        absorbed; the GP refits lazily on the next suggest()."""
+        cap = self.max_obs // 2 if cap is None else cap
+        rows = list(obs)[-cap:] if cap else []
+        absorbed = 0
+        for rec in rows:
+            if isinstance(rec, dict):
+                setting, loss, Y = rec["setting"], rec["loss"], rec["Y"]
+            else:
+                setting, loss, Y = rec
+            s = self._canonical(setting)
+            if s is None:
+                continue
+            try:
+                x = self.space.encode(s) + [self._loss_feat(float(loss))]
+            except (KeyError, ValueError, TypeError):
+                continue                  # foreign knob value: not ours
+            Y = float(Y)
+            if not np.isfinite(Y) or Y <= 0:
+                continue
+            self.X.append(x)
+            self.y.append(math.log(Y))
+            self.records.append((dict(s), float(loss), Y))
+            absorbed += 1
+        if absorbed:
+            if len(self.y) > self.max_obs:
+                self.X = self.X[-self.max_obs:]
+                self.y = self.y[-self.max_obs:]
+                self.records = self.records[-self.max_obs:]
+            self.gp = None
+        return absorbed
+
+    def _canonical(self, setting: dict) -> dict | None:
+        """Project a (possibly JSON-round-tripped) setting onto the space:
+        drop foreign keys, restore tuple-valued nominals, require every
+        knob present."""
+        out = {}
+        for k in self.space.knobs:
+            if k.name not in setting:
+                return None
+            v = setting[k.name]
+            if isinstance(v, list):
+                v = tuple(v)              # JSON turned a tuple value into a list
+            out[k.name] = v
+        return out
+
     def forget_setting(self, setting: dict):
         """Drop every stored observation of ``setting`` (load-drift retune:
         the incumbent's past Y values describe a workload that no longer

@@ -69,6 +69,15 @@ class TunerConfig:
     # zero-cost (Type II-only, warm-executable) move beats a high-EI
     # relayout that would spend its whole win on migration.
     amortize_horizon_s: float | None = None
+    # derive the horizon online from the drift detector's observed
+    # time-between-drifts (EWMA of drift intervals on the execution-time
+    # clock, clamped to horizon_bounds): frequent drift shrinks the
+    # horizon — expensive switches must pay off before the next shift —
+    # and long quiet stretches extend it.  The amortize_horizon_s
+    # constant stays as the pre-evidence fallback (and, with
+    # adapt_horizon=False, a fixed override).
+    adapt_horizon: bool = False
+    horizon_bounds: tuple = (5.0, 120.0)
 
 
 class TuningManager:
@@ -80,7 +89,8 @@ class TuningManager:
     def __init__(self, space: KnobSpace, x0: dict, cfg: TunerConfig,
                  objective: Objective | None = None,
                  reconfig_knob_classes: dict | None = None,
-                 tracer=None):
+                 tracer=None, store=None, signature=None,
+                 absorb_history: bool = True):
         self.space = space
         self.cfg = cfg
         self.objective = objective or RemainingTimeObjective(
@@ -123,6 +133,22 @@ class TuningManager:
         self._drift_var = 0.0
         self._drift_n = 0
         self.drift_events: list[dict] = []
+        # execution-time clock + drift-interval EWMA (adaptive horizon)
+        self._elapsed_s = 0.0
+        self._last_drift_t = 0.0
+        self._drift_interval_ewma: float | None = None
+        # init-phase spend counters: the fleet-store warm-start exists to
+        # shrink these, so the bench reads them per arm
+        self.init_quanta = 0
+        self.init_time_s = 0.0
+        # fleet knowledge store (repro.store): warm-start the GP from the
+        # nearest signature's prior observations and flush every new
+        # observation / audited decision back
+        self._session = None
+        self.signature = None
+        self.warm_start_info: dict | None = None
+        if store is not None and signature is not None:
+            self._attach_store(store, signature, absorb_history)
         # plan proposed but not yet executed: the tuner stays on the
         # incumbent (windows keep scoring the old setting) until the
         # driver reports the reconfiguration done via record_reconfig —
@@ -130,9 +156,75 @@ class TuningManager:
         # the background over many ticks before committing the switch.
         self._pending: rc.ReconfigPlan | None = None
 
+    # --------------------------------------------------------- fleet store
+    def _attach_store(self, store, signature, absorb: bool):
+        """Open a writer session on the knowledge store and (optionally)
+        seed the GP from the nearest signature's history.  With enough
+        absorbed evidence the LHS init queue is skipped outright — the
+        warm GP already covers the space — or halved on thin evidence;
+        provenance lands in the audit as a ``warm_start`` record."""
+        if isinstance(signature, str):
+            from repro.store.signature import TuningSignature
+            signature = TuningSignature.from_key(signature)
+        self.signature = signature
+        self._session = store.session(signature)
+        info = {"store_key": signature.key,
+                "read_only": self._session.read_only,
+                "matched_key": None, "tier": None, "absorbed_obs": 0,
+                "init_settings_skipped": 0}
+        if absorb:
+            obs, matched, tier = store.observations_for(signature)
+            n = self.bo.absorb_history(obs)
+            info.update(matched_key=matched, tier=tier, absorbed_obs=n)
+            if n >= max(4, len(self._init_queue)):
+                info["init_settings_skipped"] = len(self._init_queue)
+                self._init_queue = []
+            elif n >= 2:
+                keep = max(1, len(self._init_queue) // 2)
+                info["init_settings_skipped"] = len(self._init_queue) - keep
+                self._init_queue = self._init_queue[:keep]
+        self.warm_start_info = info
+        self.audit.warm_start(**info)
+
+    def close_store(self):
+        """Release the store session (segment handle + shared lock); the
+        driver calls this when its run ends so a compactor can proceed."""
+        if self._session is not None:
+            self._session.close()
+            self._session = None
+
+    def _persist_decision(self, rec: dict):
+        if self._session is not None:
+            self._session.record_decision(rec)
+
+    # ----------------------------------------------------- adaptive horizon
+    def effective_horizon(self) -> float | None:
+        """Amortization horizon for cost-aware acquisition.  Static mode
+        returns the configured constant.  Adaptive mode estimates the
+        drift-free runway from the EWMA of observed drift intervals —
+        extended by the current quiet stretch when it already outlasts the
+        EWMA — clamped to ``horizon_bounds``; until the first drift the
+        constant stands in (no evidence beats a measured prior)."""
+        base = self.cfg.amortize_horizon_s
+        if not self.cfg.adapt_horizon:
+            return base
+        since = self._elapsed_s - self._last_drift_t
+        if self._drift_interval_ewma is None:
+            if base is not None:
+                return base
+            est = since
+        else:
+            est = max(self._drift_interval_ewma, since)
+        lo, hi = self.cfg.horizon_bounds
+        return min(max(est, lo), hi)
+
     # ------------------------------------------------------------ metrics in
     def record_iteration(self, loss: float, time_s: float):
         self._iter += 1
+        self._elapsed_s += time_s
+        if self.phase == "init":
+            self.init_quanta += 1
+            self.init_time_s += time_s
         self.repo.add(self._iter, time_s, float(loss))
 
     def record_reconfig(self, plan: rc.ReconfigPlan, cost_s: float,
@@ -213,6 +305,11 @@ class TuningManager:
         # as the first evidence of the new regime
         self._check_drift(w.setting, est["Y"])
         self.bo.observe(w.setting, start_loss, est["Y"])
+        if self._session is not None:
+            # flush the fresh observation to the fleet store (one JSONL
+            # append + fsync-free flush; read-only sessions drop it)
+            self._session.record_observation(w.setting, float(start_loss),
+                                             est["Y"])
         # post-switch windows are the "did the move pay off" audit evidence
         self.audit.window(window=self._window_count, setting=w.setting,
                           Y=est["Y"], phase=self.phase)
@@ -254,11 +351,23 @@ class TuningManager:
                 and (Y - self._drift_mean) / sd > self.cfg.drift_z
                 and Y > self._drift_mean * (1.0 + self.cfg.drift_rel)):
             dropped = self.bo.forget_setting(setting)
+            # drift-interval EWMA on the execution-time clock: the
+            # adaptive amortization horizon is "how long does a regime
+            # last around here" (first interval = time since start)
+            interval = self._elapsed_s - self._last_drift_t
+            self._last_drift_t = self._elapsed_s
+            if self._drift_interval_ewma is None:
+                self._drift_interval_ewma = interval
+            else:
+                self._drift_interval_ewma += self.cfg.drift_alpha * (
+                    interval - self._drift_interval_ewma)
             self.drift_events.append({
                 "window": self._window_count, "setting": dict(setting),
                 "Y": Y, "ewma": self._drift_mean,
                 "z": float((Y - self._drift_mean) / sd),
-                "dropped_obs": dropped})
+                "dropped_obs": dropped,
+                "t_s": self._elapsed_s, "interval_s": interval,
+                "interval_ewma_s": self._drift_interval_ewma})
             self._a_scale = 1
             self._drift_mean, self._drift_var, self._drift_n = Y, 0.0, 1
             return
@@ -295,11 +404,11 @@ class TuningManager:
             plan = self._plan(nxt)
             scales = self._reconfig_scales_for(nxt)
             est = self.costs.estimate_breakdown(plan.kinds, scales=scales)
-            self.audit.decision(
+            self._persist_decision(self.audit.decision(
                 window=self._window_count, phase="init", candidate=nxt,
                 incumbent=self.current, switched=True, reason="init_sample",
                 predicted_by_kind=est.by_kind,
-                predicted_cost_s=est.total_s)
+                predicted_cost_s=est.total_s))
             self._pending = plan
             return plan
         if self.phase == "init":
@@ -307,7 +416,7 @@ class TuningManager:
 
         # ---- online tuning phase (§III-C)
         cur_loss = max(self.repo.latest_loss, self.cfg.eps * 1e-3)
-        horizon = self.cfg.amortize_horizon_s
+        horizon = self.effective_horizon()
         if horizon is not None:
             # cost-aware acquisition: hand the BO a per-candidate switch
             # cost (same classify + estimate_breakdown derivation the gate
@@ -335,21 +444,21 @@ class TuningManager:
                    if best_s not in (float("inf"),) else 0.0)
             threshold = r_cost + self.cfg.min_ei_seconds + rel
             stay = ei_s <= threshold
-            self.audit.decision(
+            self._persist_decision(self.audit.decision(
                 window=self._window_count, phase="online", candidate=x_new,
                 incumbent=self.current, switched=not stay,
                 reason="switch" if not stay else "ei_below_cost",
                 ei_s=ei_s, best_s=best_s, predicted_cost_s=r_cost,
                 predicted_by_kind=est.by_kind,
-                threshold_s=threshold, horizon_s=horizon, acquisition=acq)
+                threshold_s=threshold, horizon_s=horizon, acquisition=acq))
             if not stay:
                 self._pending = plan
                 return plan
         else:
-            self.audit.decision(
+            self._persist_decision(self.audit.decision(
                 window=self._window_count, phase="online", candidate=x_new,
                 incumbent=self.current, switched=False, reason="incumbent",
-                ei_s=ei_s, best_s=best_s, horizon_s=horizon, acquisition=acq)
+                ei_s=ei_s, best_s=best_s, horizon_s=horizon, acquisition=acq))
         # staying put: stretch the window (less BO overhead once stable,
         # back to `a` after any switch)
         self._a_scale = min(self._a_scale * 2, 16)

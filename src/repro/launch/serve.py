@@ -67,6 +67,29 @@ def _engine_main(args, cfg, params):
               f"{time.perf_counter() - t0:.1f}s", flush=True)
     trace = make_trace(args.scenario, args.rate, args.duration,
                        vocab=cfg.vocab_size, seed=args.seed, **trace_kw)
+    # fleet knowledge store: compute this run's signature, seed the start
+    # setting from the golden table (nearest match wins), and hand the
+    # store to the tuner so the GP warm-starts from prior posteriors and
+    # flushes what it learns back
+    store = sig = None
+    if args.tuning_store and args.selftune:
+        from repro.store import TuningStore, lookup, signature_from_trace
+        store = TuningStore(args.tuning_store)
+        sig = signature_from_trace(cfg, engine.pool.kind, args.max_seq,
+                                   trace, args.duration)
+        entry, gkey, gtier = (lookup(store.build_golden(), sig)
+                              if store.read_records(kinds=("obs",))
+                              else (None, None, None))
+        if entry is not None:
+            golden = {k: tuple(v) if isinstance(v, list) else v
+                      for k, v in entry["incumbent"]["setting"].items()}
+            setting = dict(setting, **golden)
+            engine.reconfigure(setting)
+            print(f"tuning-store: golden incumbent {golden} "
+                  f"({gtier} match, {entry['n_obs']} obs) -> start setting",
+                  flush=True)
+        else:
+            print(f"tuning-store: no golden entry for {sig.key}", flush=True)
     # attach the tracer after warm-start so the attribution panel covers
     # the serving run, not startup compilation (a --cold run still shows
     # its compiles: they fire inside ticks/reconfig windows as exec.build)
@@ -80,10 +103,20 @@ def _engine_main(args, cfg, params):
             space, setting,
             TunerConfig(eps=1e-6, a=args.window, b=args.init_settings,
                         seed=args.seed, drift_z=args.drift_z,
-                        window_time_s=2.0),
+                        window_time_s=2.0,
+                        # cost-aware acquisition with the horizon derived
+                        # online from observed drift intervals (20s is the
+                        # pre-evidence fallback)
+                        amortize_horizon_s=20.0, adapt_horizon=True),
             objective=ServingObjective(engine, slo_p99_s=args.slo),
             reconfig_knob_classes={"mesh_knobs": SERVING_RELAYOUT_KNOBS},
-            tracer=tracer)
+            tracer=tracer, store=store, signature=sig)
+        if tuner.warm_start_info is not None:
+            ws = tuner.warm_start_info
+            print(f"tuning-store: warm-start absorbed {ws['absorbed_obs']} "
+                  f"obs (tier={ws['tier']}, skipped "
+                  f"{ws['init_settings_skipped']} init settings"
+                  f"{', READ-ONLY' if ws['read_only'] else ''})", flush=True)
 
     mode = "selftune" if args.selftune else f"fixed(max_batch={args.batch})"
     print(f"arch={cfg.name} family={cfg.family} pool={engine.pool.kind} "
@@ -107,6 +140,16 @@ def _engine_main(args, cfg, params):
         print(f"reconfigurations: {stats['reconfig_count']} "
               f"({stats['reconfig_total_s']:.2f}s total), "
               f"final setting: {stats['final_setting']}")
+    if store is not None and tuner is not None:
+        # release the shared lock, fold this run's segment in, refresh the
+        # golden table — the next process warm-starts from all of it
+        tuner.close_store()
+        compacted = store.compact()
+        table = store.write_golden()
+        print(f"tuning-store: {len(table['entries'])} golden entries -> "
+              f"{store.golden_path}"
+              f"{'' if compacted else ' (compaction skipped: store busy)'}",
+              flush=True)
     if tracer is not None:
         audit = tuner.audit if tuner is not None else None
         attr = time_attribution(tracer, stats["wall_s"], audit=audit)
@@ -154,6 +197,12 @@ def main():
                     help="random settings in the tuner init phase (b)")
     ap.add_argument("--slo", type=float, default=3.0,
                     help="p99 latency SLO (s) for the serving objective")
+    ap.add_argument("--tuning-store", default=None, metavar="DIR",
+                    help="fleet tuning knowledge store directory: with "
+                         "--selftune, seed the start setting from its "
+                         "golden table, warm-start the BO from the nearest "
+                         "signature's history, and persist this run's "
+                         "observations/decisions back")
     ap.add_argument("--drift-z", type=float, default=3.0,
                     help="load-drift z-score threshold (0 disables the "
                          "EWMA re-search trigger)")

@@ -80,6 +80,23 @@ class TuningAudit:
         return self._add({"type": "window", "window": window,
                           "setting": dict(setting), "Y": Y, "phase": phase})
 
+    def warm_start(self, *, store_key: str, matched_key: str | None,
+                   tier: str | None, absorbed_obs: int,
+                   init_settings_skipped: int, read_only: bool) -> dict:
+        """Fleet-store provenance: which signature this run asked for,
+        which key actually supplied history (and at what fallback tier),
+        how many observations seeded the GP, and how much of the LHS init
+        phase that evidence displaced.  One record per run, written at
+        tuner construction — every later decision implicitly builds on
+        it."""
+        return self._add({
+            "type": "warm_start", "store_key": store_key,
+            "matched_key": matched_key, "tier": tier,
+            "absorbed_obs": int(absorbed_obs),
+            "init_settings_skipped": int(init_settings_skipped),
+            "read_only": bool(read_only),
+        })
+
     # ----------------------------------------------------------- reductions
     def of_type(self, t: str) -> list[dict]:
         return [r for r in self.records if r["type"] == t]
@@ -145,8 +162,10 @@ class TuningAudit:
                 by_kind_count[k] = by_kind_count.get(k, 0) + 1
                 by_kind_s[k] = (by_kind_s.get(k, 0.0)
                                 + rec["actual_by_kind"].get(k, 0.0))
+        warm = self.of_type("warm_start")
         return {
             "decisions": len(decisions),
+            "warm_start": warm[0] if warm else None,
             "switches": sum(d["switched"] for d in decisions),
             "stays": sum(not d["switched"] for d in decisions),
             "reconfigs": len(reconfigs),

@@ -106,6 +106,10 @@ def time_attribution(tracer, wall_s: float, audit=None,
                                   "switches": s["switches"],
                                   "stays": s["stays"]}
         out["cost_model_calibration"] = s["cost_model_calibration"]
+        if s.get("warm_start"):
+            # fleet-store provenance rides along with the panel so a bench
+            # arm's "where did the saved init quanta come from" is answerable
+            out["warm_start"] = s["warm_start"]
         out["stall_ms_per_reconfig"] = round(
             1000.0 * stall_s / max(s["reconfigs"], 1), 3)
     return out

@@ -1085,4 +1085,12 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         "pool": engine.pool.snapshot(),
         "exec_cache": engine._steps.stats(),
     }
+    if tuner is not None:
+        # init-phase spend + fleet-store warm-start provenance: the bench's
+        # warm_start_gain panel compares these across cold/warm arms
+        stats["tuner_init_quanta"] = tuner.init_quanta
+        stats["tuner_init_time_s"] = round(tuner.init_time_s, 4)
+        stats["tuner_horizon_s"] = tuner.effective_horizon()
+        if tuner.warm_start_info is not None:
+            stats["warm_start"] = dict(tuner.warm_start_info)
     return stats

@@ -159,3 +159,50 @@ def test_architecture_doc_exists_and_linked():
         readme = f.read()
     assert "docs/ARCHITECTURE.md" in readme
     assert "docs/KNOBS.md" in readme
+
+
+STORE_DOC = os.path.join(os.path.dirname(DOC), "TUNING_STORE.md")
+FIELD_ROW = re.compile(r"^\|\s*`(?P<field>[a-zA-Z_]+)`\s*\|"
+                       r"\s*(?P<kinds>[a-z, ]+?)\s*\|")
+
+
+def _parse_store_schema_table():
+    with open(STORE_DOC) as f:
+        rows = {}
+        for line in f:
+            m = FIELD_ROW.match(line)
+            if m and m["field"] != "field":
+                rows[m["field"]] = {k.strip()
+                                    for k in m["kinds"].split(",")}
+    return rows
+
+
+def test_store_schema_documented_both_directions():
+    """docs/TUNING_STORE.md's record-schema table matches
+    repro.store.SCHEMA_FIELDS exactly: every on-disk field has a row
+    listing every kind that carries it, and no row documents a field or
+    kind the store no longer writes."""
+    from repro.store import SCHEMA_FIELDS
+    rows = _parse_store_schema_table()
+    assert rows, "no parseable schema table in docs/TUNING_STORE.md"
+    for kind, fields in SCHEMA_FIELDS.items():
+        for field in fields:
+            assert field in rows, \
+                f"store field {field!r} ({kind}) missing from the " \
+                f"docs/TUNING_STORE.md schema table"
+            assert kind in rows[field], \
+                f"field {field!r}: docs omit record kind {kind!r}"
+    for field, kinds in rows.items():
+        for kind in kinds:
+            assert kind in SCHEMA_FIELDS, \
+                f"docs document unknown record kind {kind!r}"
+            assert field in SCHEMA_FIELDS[kind], \
+                f"docs document {field!r} under {kind!r} but the store " \
+                f"doesn't write it — stale row?"
+
+
+def test_tuning_store_doc_linked():
+    with open(os.path.join(os.path.dirname(DOC), "..", "README.md")) as f:
+        assert "docs/TUNING_STORE.md" in f.read()
+    with open(os.path.join(os.path.dirname(DOC), "ARCHITECTURE.md")) as f:
+        assert "TUNING_STORE.md" in f.read()

@@ -227,6 +227,50 @@ def test_window_time_budget_closes_heavy_windows():
     assert run(0.001) == 50     # cheap iters run the full a=50 window
 
 
+def test_adaptive_amortize_horizon_tracks_drift_intervals():
+    """With adapt_horizon the acquisition horizon is derived online from
+    the drift-interval EWMA on the execution-time clock: the configured
+    constant stands in until the first drift, then measured intervals
+    (extended by an already-longer quiet stretch) take over, always
+    clamped to horizon_bounds."""
+    space = KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),))
+    # static mode: the constant is a fixed override
+    static = TuningManager(space, {"a": 1},
+                           TunerConfig(eps=1e-9, a=5, b=2, seed=0,
+                                       amortize_horizon_s=42.0))
+    assert static.effective_horizon() == 42.0
+
+    cfg = TunerConfig(eps=1e-9, a=5, b=4, seed=0, drift_z=3.0,
+                      ei_rel_threshold=0.0, amortize_horizon_s=20.0,
+                      adapt_horizon=True, horizon_bounds=(5.0, 120.0))
+    tuner = TuningManager(space, {"a": 1}, cfg, objective=_TimeObjective())
+    assert tuner.effective_horizon() == 20.0       # pre-evidence fallback
+    rng = np.random.default_rng(0)
+    for it in range(900):
+        t = 0.1 / tuner.current["a"]
+        if it > 450 and tuner.current["a"] == 8:
+            t *= 6.0                               # workload shift
+        tuner.record_iteration(1.0, t * (1 + 0.02 * rng.standard_normal()))
+        plan = tuner.maybe_advance()
+        if plan is not None:
+            tuner.record_reconfig(plan, 0.01)
+    assert tuner.drift_events
+    ev = tuner.drift_events[0]
+    assert ev["interval_ewma_s"] > 0 and ev["interval_s"] > 0
+    assert ev["t_s"] == pytest.approx(tuner._last_drift_t)
+    lo, hi = cfg.horizon_bounds
+    h = tuner.effective_horizon()
+    assert lo <= h <= hi
+    since = tuner._elapsed_s - tuner._last_drift_t
+    assert h == min(max(max(tuner._drift_interval_ewma, since), lo), hi)
+    # clamping at both bounds (the constant no longer participates)
+    tuner._drift_interval_ewma = 1e-3
+    tuner._last_drift_t = tuner._elapsed_s
+    assert tuner.effective_horizon() == lo
+    tuner._drift_interval_ewma = 1e6
+    assert tuner.effective_horizon() == hi
+
+
 def test_drift_detector_ignores_steady_noise():
     """Ordinary noise must not trip the z-test (no spurious forgetting)."""
     space = KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),))

@@ -1,0 +1,413 @@
+"""Fleet tuning knowledge store: signature bucketing, concurrent segment
+merge, golden-knobs reduction, and BO warm-start quality."""
+import json
+import multiprocessing
+import os
+from collections import namedtuple
+
+import numpy as np
+import pytest
+
+from repro.core.knobs import Knob, KnobSpace
+from repro.core.tuner import TunerConfig, TuningManager
+from repro.store import (SCHEMA_FIELDS, TuningSignature, TuningStore,
+                         check_golden, fallback_tiers, lookup,
+                         quantize_workload, reduce_golden, workload_stats)
+from repro.store.store import _FileLock
+
+KEY = "m1:dense:aaaaaaaa|paged:seq96|r5:p4:g4:s0"
+
+_Req = namedtuple("_Req", ("prompt", "max_new", "arrival_s"))
+
+
+# --------------------------------------------------------------- signature
+def test_signature_key_roundtrip():
+    sig = TuningSignature.from_key(KEY)
+    assert sig.key == KEY
+    assert sig.model == "m1:dense:aaaaaaaa"
+    assert sig.family == "dense"
+    assert TuningSignature.from_key(sig.key) == sig
+
+
+def test_signature_match_tiers():
+    sig = TuningSignature.from_key(KEY)
+    same_pool = "m1:dense:aaaaaaaa|paged:seq96|r7:p5:g4:s3"
+    same_family = "m2:dense:bbbbbbbb|recurrent:seq64|r1:p3:g3:s0"
+    other = "m3:moe:cccccccc|paged:seq96|r5:p4:g4:s0"
+    assert sig.matches(KEY, "exact")
+    assert not sig.matches(same_pool, "exact")
+    assert sig.matches(same_pool, "pool")
+    assert not sig.matches(same_family, "pool")
+    assert sig.matches(same_family, "family")
+    assert not sig.matches(other, "family")
+    # fallback order is strongest-first and resolves through the same
+    # predicates (store provenance and golden lookup must agree)
+    tiers = fallback_tiers(sig)
+    assert [t for t, _ in tiers] == ["exact", "pool", "family"]
+    assert tiers[1][1](same_pool) and not tiers[1][1](same_family)
+
+
+def test_workload_bucketing_stability():
+    """Small load drift stays in one bucket (observations pool across
+    runs); order-of-magnitude change does not."""
+    base = {"rate_rps": 30.0, "mean_prompt": 20.0, "mean_new": 16.0,
+            "share_ratio": 0.1}
+    drifted = dict(base, rate_rps=33.0, mean_prompt=22.0)
+    assert quantize_workload(base) == quantize_workload(drifted)
+    assert quantize_workload(dict(base, rate_rps=100.0)) \
+        != quantize_workload(base)
+    assert quantize_workload(dict(base, share_ratio=0.9)) \
+        != quantize_workload(base)
+
+
+def test_workload_stats_share_ratio():
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, 100, (20,))
+    reqs = [_Req(shared, 8, 0.1 * i) for i in range(8)]
+    reqs += [_Req(rng.integers(0, 100, (20,)), 8, 1.0 + 0.1 * i)
+             for i in range(8)]
+    st = workload_stats(reqs, duration_s=2.0)
+    assert st["n_requests"] == 16
+    assert st["rate_rps"] == pytest.approx(8.0)
+    # 7 of the 8 identical-prefix requests re-hit a seen head
+    assert st["share_ratio"] == pytest.approx(7 / 16)
+    assert workload_stats([], duration_s=1.0)["n_requests"] == 0
+
+
+# ------------------------------------------------------------------- store
+def test_store_two_sessions_merge_sorted(tmp_path):
+    store = TuningStore(str(tmp_path))
+    s1, s2 = store.session(KEY), store.session(KEY)
+    s1.record_observation({"a": 1}, 1.0, 3.0)
+    s2.record_observation({"a": 2}, 1.0, 2.0)
+    s1.record_observation({"a": 4}, 1.0, 1.0)
+    s1.close()
+    s2.close()
+    recs = store.read_records(kinds=("obs",))
+    assert len(recs) == 3
+    stamps = [tuple(r["stamp"]) for r in recs]
+    assert stamps == sorted(stamps)            # fleet-wide monotonic merge
+    assert {r["setting"]["a"] for r in recs} == {1, 2, 4}
+    # on-disk records carry exactly the documented schema
+    for r in recs:
+        assert tuple(sorted(r)) == tuple(sorted(SCHEMA_FIELDS["obs"]))
+
+
+def test_store_decision_records_and_nonfinite_guard(tmp_path):
+    store = TuningStore(str(tmp_path))
+    sess = store.session(KEY)
+    sess.record_observation({"a": 1}, 1.0, float("nan"))
+    sess.record_observation({"a": 1}, 1.0, float("inf"))
+    sess.record_decision({"window": 3, "phase": "online",
+                          "candidate": {"a": 2}, "incumbent": {"a": 1},
+                          "switched": True, "reason": "ei>cost",
+                          "ei_s": 1.5, "predicted_cost_s": 0.2,
+                          "foreign_field": "dropped"})
+    sess.close()
+    assert store.read_records(kinds=("obs",)) == []    # divergence not shared
+    decs = store.read_records(kinds=("decision",))
+    assert len(decs) == 1
+    assert decs[0]["candidate"] == {"a": 2} and decs[0]["switched"] is True
+    assert "foreign_field" not in decs[0]
+    assert tuple(sorted(decs[0])) == tuple(sorted(SCHEMA_FIELDS["decision"]))
+
+
+def test_store_reader_skips_torn_tail(tmp_path):
+    store = TuningStore(str(tmp_path))
+    sess = store.session(KEY)
+    sess.record_observation({"a": 1}, 1.0, 1.0)
+    sess.close()
+    seg = os.path.join(store.segments_dir, os.listdir(store.segments_dir)[0])
+    with open(seg, "a") as f:
+        f.write('{"v": 1, "kind": "obs", "sig": "' + KEY)   # mid-append tear
+    assert len(store.read_records(kinds=("obs",))) == 1
+
+
+def test_compaction_preserves_merge(tmp_path):
+    store = TuningStore(str(tmp_path))
+    for i in range(3):
+        sess = store.session(KEY)
+        for j in range(4):
+            sess.record_observation({"a": i}, 1.0, float(i + j + 1))
+        sess.close()
+    assert len(store._segment_files()) == 3
+    before = store.read_records()
+    assert store.compact() is True
+    assert len(store._segment_files()) == 1
+    after = store.read_records()
+    assert [tuple(r["stamp"]) for r in after] \
+        == [tuple(r["stamp"]) for r in before]
+
+
+def test_compaction_blocked_by_open_session(tmp_path):
+    store = TuningStore(str(tmp_path), lock_timeout_s=0.1)
+    s1, s2 = store.session(KEY), store.session(KEY)   # both write some
+    s1.record_observation({"a": 1}, 1.0, 1.0)
+    s2.record_observation({"a": 2}, 1.0, 2.0)
+    # a writer holds the shared lock: the exclusive compaction lock must
+    # time out and leave the segments untouched
+    assert store.compact() is False
+    assert len(store._segment_files()) == 2
+    s1.close()
+    s2.close()
+    assert store.compact() is True
+    assert len(store.read_records(kinds=("obs",))) == 2
+
+
+def test_lock_timeout_degrades_to_read_only(tmp_path):
+    store = TuningStore(str(tmp_path), lock_timeout_s=0.1)
+    sess = store.session(KEY)
+    sess.record_observation({"a": 1}, 1.0, 1.0)
+    sess.close()
+    holder = _FileLock(store.lock_path)
+    assert holder.acquire(exclusive=True, timeout_s=1.0)
+    try:
+        ro = store.session(KEY)
+        assert ro.read_only
+        ro.record_observation({"a": 2}, 1.0, 2.0)     # dropped, not fatal
+        assert ro.dropped == 1
+        ro.close()
+        # reads stay lock-free: warm-start works even during the stall
+        obs, matched, tier = store.observations_for(KEY)
+        assert len(obs) == 1 and tier == "exact" and matched == KEY
+    finally:
+        holder.release()
+
+
+def test_observations_for_fallback_order(tmp_path):
+    store = TuningStore(str(tmp_path))
+    pool_key = "m1:dense:aaaaaaaa|paged:seq96|r9:p6:g5:s3"
+    family_key = "m9:dense:ffffffff|recurrent:seq64|r1:p3:g3:s0"
+    sess = store.session(family_key)
+    sess.record_observation({"a": 1}, 1.0, 5.0)
+    sess.close()
+    obs, matched, tier = store.observations_for(KEY)
+    assert tier == "family" and matched == family_key and len(obs) == 1
+    sess = store.session(pool_key)
+    sess.record_observation({"a": 2}, 1.0, 4.0)
+    sess.close()
+    obs, matched, tier = store.observations_for(KEY)     # stronger tier wins
+    assert tier == "pool" and matched == pool_key and len(obs) == 1
+    sess = store.session(KEY)
+    sess.record_observation({"a": 4}, 1.0, 3.0)
+    sess.close()
+    obs, matched, tier = store.observations_for(KEY)
+    assert tier == "exact" and matched == KEY and len(obs) == 1
+    assert store.observations_for(
+        "x:encoder:00000000|paged:seq8|r0:p0:g0:s0") == ([], None, None)
+
+
+# ------------------------------------------------- multi-process stress
+def _writer_proc(root, key, n, idx):
+    from repro.store import TuningStore
+    store = TuningStore(root, lock_timeout_s=10.0)
+    sess = store.session(key)
+    for i in range(n):
+        sess.record_observation({"writer": idx, "i": i}, 1.0, float(i + 1))
+    sess.close()
+
+
+def test_two_writer_processes_and_compacting_reader(tmp_path):
+    """The stress satellite: two OS processes append concurrently while the
+    parent reads and tries to compact; nothing is lost or double-counted."""
+    root = str(tmp_path)
+    n = 40
+    ctx = multiprocessing.get_context("spawn")
+    procs = [ctx.Process(target=_writer_proc, args=(root, KEY, n, idx))
+             for idx in range(2)]
+    for p in procs:
+        p.start()
+    store = TuningStore(root, lock_timeout_s=0.05)
+    try:
+        while any(p.is_alive() for p in procs):
+            recs = store.read_records(kinds=("obs",))       # lock-free read
+            assert len(recs) <= 2 * n
+            assert all(r["sig"] == KEY for r in recs)
+            store.compact()       # denied (False) while a writer holds the
+            #                       shared lock; harmless if a gap lets it in
+    finally:
+        for p in procs:
+            p.join(timeout=60)
+    assert all(p.exitcode == 0 for p in procs)
+    store.lock_timeout_s = 5.0
+    assert store.compact() is True
+    recs = store.read_records(kinds=("obs",))
+    assert len(recs) == 2 * n                               # nothing lost
+    per_writer = {0: set(), 1: set()}
+    for r in recs:
+        per_writer[r["setting"]["writer"]].add(r["setting"]["i"])
+    assert per_writer[0] == per_writer[1] == set(range(n))
+    stamps = [tuple(r["stamp"]) for r in recs]
+    assert stamps == sorted(stamps) and len(set(stamps)) == 2 * n
+
+
+# ------------------------------------------------------------------ golden
+def _obs(sig, setting, Y, seq):
+    return {"v": 1, "kind": "obs", "sig": sig,
+            "stamp": [1000.0 + seq, "sid0", seq],
+            "setting": dict(setting), "loss": 1.0, "Y": float(Y)}
+
+
+def test_golden_reduction_ranks_and_counts():
+    recs = ([_obs(KEY, {"a": 8}, 1.0, i) for i in range(4)]
+            + [_obs(KEY, {"a": 1}, 5.0, 10 + i) for i in range(3)]
+            + [_obs(KEY, {"a": 4}, 2.0, 20)])
+    table = reduce_golden(recs, top_k=2)
+    check_golden(table)
+    e = table["entries"][KEY]
+    assert e["n_obs"] == 8 and e["n_settings"] == 3
+    assert e["incumbent"]["setting"] == {"a": 8}
+    assert e["incumbent"]["n"] == 4
+    assert [r["setting"]["a"] for r in e["top_k"]] == [8, 4]   # top_k=2 cap
+
+
+def test_golden_recency_decay_beats_stale_history():
+    """A setting with a long great past but bad recent evidence must lose
+    to a consistently-decent one — the un-decayed mean would say the
+    opposite."""
+    recs = ([_obs(KEY, {"a": 1}, 0.1, i) for i in range(10)]     # old glory
+            + [_obs(KEY, {"a": 2}, 1.0, 10 + i) for i in range(3)]
+            + [_obs(KEY, {"a": 1}, 8.0, 20)])                    # recent pain
+    plain_mean_a1 = (10 * 0.1 + 8.0) / 11
+    assert plain_mean_a1 < 1.0          # plain averaging would pick a=1 ...
+    table = reduce_golden(recs, decay=0.9)
+    e = table["entries"][KEY]
+    assert e["incumbent"]["setting"] == {"a": 2}     # ... decay picks a=2
+    check_golden(table)
+
+
+def test_golden_lookup_fallback(tmp_path):
+    pool_key = "m1:dense:aaaaaaaa|paged:seq96|r9:p6:g5:s3"
+    pool_key2 = "m1:dense:aaaaaaaa|paged:seq96|r2:p2:g2:s0"
+    recs = ([_obs(pool_key, {"a": 2}, 2.0, i) for i in range(5)]
+            + [_obs(pool_key2, {"a": 4}, 1.0, 10 + i) for i in range(2)])
+    table = reduce_golden(recs)
+    entry, key, tier = lookup(table, KEY)
+    # non-exact tier: the best-evidenced neighbour wins, not the best Y
+    assert tier == "pool" and key == pool_key
+    assert entry["incumbent"]["setting"] == {"a": 2}
+    entry, key, tier = lookup(table, pool_key2)
+    assert tier == "exact" and entry["incumbent"]["setting"] == {"a": 4}
+    assert lookup(table, "x:moe:00000000|paged:seq8|r0:p0:g0:s0") \
+        == (None, None, None)
+    # end-to-end through the store: build -> write -> check
+    store = TuningStore(str(tmp_path))
+    sess = store.session(KEY)
+    for i in range(3):
+        sess.record_observation({"a": 8}, 1.0, 1.0 + i)
+    sess.close()
+    t2 = store.write_golden()
+    check_golden(t2)
+    assert os.path.exists(store.golden_path)
+    with open(store.golden_path) as f:
+        assert json.load(f)["entries"][KEY]["n_obs"] == 3
+
+
+# ------------------------------------------------------------- warm start
+class _TimeObjective:
+    def window_score(self, iters, values, times):
+        t = float(np.mean(times))
+        return {"Y": t * 1000, "t_bar": t, "remaining_iters": 1000}
+
+    peek = window_score
+
+    def is_converged(self, repo):
+        return False
+
+
+def _space():
+    return KnobSpace((Knob("a", "ordinal", (1, 2, 4, 8)),
+                      Knob("b", "nominal", ("x", "y"))))
+
+
+def _true_time(s):
+    return 0.1 / s["a"] + (0.05 if s["b"] == "y" else 0.0)
+
+
+def _drive(tuner, quanta, seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(quanta):
+        t = _true_time(tuner.current) * (1 + 0.02 * rng.standard_normal())
+        tuner.record_iteration(1.0, t)
+        plan = tuner.maybe_advance()
+        if plan is not None:
+            tuner.record_reconfig(plan, 0.01)
+
+
+def _make_tuner(store, absorb):
+    return TuningManager(
+        _space(), {"a": 1, "b": "y"},
+        TunerConfig(eps=1e-9, a=5, b=6, seed=0, ei_rel_threshold=0.0),
+        objective=_TimeObjective(), store=store, signature=KEY,
+        absorb_history=absorb)
+
+
+def test_warm_start_matches_cold_in_half_the_quanta(tmp_path):
+    """The fleet-amortization claim, unit-sized: a second process absorbing
+    the first's history reaches within 5% of the cold incumbent objective
+    in at most half the init-phase quanta."""
+    store = TuningStore(str(tmp_path))
+    cold = _make_tuner(store, absorb=False)
+    assert cold.warm_start_info["absorbed_obs"] == 0
+    assert cold.warm_start_info["init_settings_skipped"] == 0
+    _drive(cold, 400, seed=1)
+    assert cold.phase == "online"
+    cold_obj = _true_time(cold.current)
+    cold.close_store()
+
+    warm = _make_tuner(store, absorb=True)
+    info = warm.warm_start_info
+    assert info["tier"] == "exact" and info["matched_key"] == KEY
+    assert info["absorbed_obs"] >= 4
+    assert info["init_settings_skipped"] == 6       # LHS queue skipped whole
+    assert len(warm.bo.records) == info["absorbed_obs"]
+    _drive(warm, cold.init_quanta // 2, seed=2)
+    assert warm.phase == "online"
+    assert warm.init_quanta * 2 <= cold.init_quanta
+    assert _true_time(warm.current) <= 1.05 * max(cold_obj, _true_time(
+        {"a": 8, "b": "x"}))
+    warm.close_store()
+    # both arms' evidence merged and persisted for the next process
+    obs, _, tier = store.observations_for(KEY)
+    assert tier == "exact" and len(obs) >= len(cold.history)
+
+
+def test_warm_start_read_only_fallback(tmp_path):
+    """A wedged lock must not break tuning: the session degrades to
+    read-only, absorption still happens, appends are dropped."""
+    store = TuningStore(str(tmp_path), lock_timeout_s=0.1)
+    seeder = _make_tuner(store, absorb=False)
+    _drive(seeder, 120, seed=3)
+    seeder.close_store()
+    holder = _FileLock(store.lock_path)
+    assert holder.acquire(exclusive=True, timeout_s=1.0)
+    try:
+        warm = _make_tuner(store, absorb=True)
+        assert warm.warm_start_info["read_only"]
+        assert warm.warm_start_info["absorbed_obs"] >= 4
+        _drive(warm, 30, seed=4)
+        assert warm._session.dropped > 0
+        warm.close_store()
+    finally:
+        holder.release()
+
+
+def test_absorb_history_guards():
+    """BO absorption sanitizes foreign evidence: unknown knob values and
+    non-finite objectives are skipped, the window cap holds."""
+    from repro.core.bo import LossAwareBO
+    bo = LossAwareBO(_space(), seed=0)
+    good = [{"setting": {"a": 8, "b": "x"}, "loss": 1.0, "Y": 1.0 + i}
+            for i in range(5)]
+    bad = [{"setting": {"a": 3, "b": "x"}, "loss": 1.0, "Y": 1.0},   # a=3 ∉
+           {"setting": {"a": 8}, "loss": 1.0, "Y": 1.0},             # b missing
+           {"setting": {"a": 8, "b": "x"}, "loss": 1.0, "Y": float("nan")},
+           {"setting": {"a": 8, "b": "x"}, "loss": 1.0, "Y": -1.0}]
+    n = bo.absorb_history(good + bad)
+    assert n == 5 and len(bo.records) == 5
+    # JSON round-trip turns tuples into lists; absorption restores them
+    space = KnobSpace((Knob("mesh", "nominal", ((1, 2), (2, 1))),))
+    bo2 = LossAwareBO(space, seed=0)
+    assert bo2.absorb_history(
+        [{"setting": {"mesh": [2, 1]}, "loss": 1.0, "Y": 2.0}]) == 1
+    assert bo2.records[0][0]["mesh"] == (2, 1)
