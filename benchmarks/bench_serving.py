@@ -116,8 +116,12 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
     # one arm's prefills must never serve another arm's admissions.  Each
     # arm gets its own tracer so the time-attribution panel decomposes the
     # arms separately (self-times: nested spans never double-count).
+    # Drafters reset alongside, reseeded from the scenario seed: n-gram
+    # lookup tables must not leak across arms, and the RNG fallback must
+    # be deterministic per run (bit-identical speculation panels).
     engine.reconfigure(DEFAULT_SERVING_SETTING)
     engine.pool.reset_prefix_cache()
+    engine.reset_drafters(seed)
     tr_fx = Tracer()
     engine.set_tracer(tr_fx)
     out["fixed_default"] = serve_loop(engine, trace())
@@ -125,6 +129,7 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
 
     engine.reconfigure(DEFAULT_SERVING_SETTING)
     engine.pool.reset_prefix_cache()
+    engine.reset_drafters(seed)
     tr_tn = Tracer()
     engine.set_tracer(tr_tn)
     # tuned-cold: LHS-from-scratch; with a store attached it records its
@@ -144,6 +149,14 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
             tr_tn, out["self_tuned"]["wall_s"], audit=tuner.audit),
     }
 
+    # speculation panel: the tuned arm's drafted/accepted counters plus
+    # the spec_k the tuner's incumbent actually landed on — the
+    # workload-sensitivity evidence (prompt-lookup thrives on
+    # shared_prefix traffic, buys nothing on bursty random traffic)
+    out["speculation"] = dict(out["self_tuned"]["speculation"])
+    out["speculation"]["spec_k_selected"] = engine._spec_k_of(
+        out["self_tuned"]["final_setting"])
+
     if store is not None:
         # tuned-warm third arm: same trace, same tuner config, but the BO
         # is seeded from the store (the cold arm's observations at minimum)
@@ -156,6 +169,7 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
             x0.update(entry["incumbent"]["setting"])
         engine.reconfigure(x0)
         engine.pool.reset_prefix_cache()
+        engine.reset_drafters(seed)
         tr_wm = Tracer()
         engine.set_tracer(tr_wm)
         tuner_w = make_tuner(tr_wm, absorb=True, sig=sig, x0=x0)
@@ -206,6 +220,7 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
         for label, share in (("share_off", False), ("share_on", True)):
             engine.reconfigure(dict(base, prefix_share=share))
             engine.pool.reset_prefix_cache()
+            engine.reset_drafters(seed)
             st = serve_loop(engine, trace())
             abl[label] = {k: st[k] for k in REPORT_KEYS}
             abl[label]["shared_blocks_hit"] = st["shared_blocks_hit"]
@@ -259,6 +274,7 @@ def run_scenario(name, engine, cfg, rate, duration, seed,
                 engine.reconfigure(base)
                 engine.set_attn_impl(impl)      # warm Type II swap
                 engine.pool.reset_prefix_cache()
+                engine.reset_drafters(seed)
                 if rep == 0:
                     # rehearsal: absorb first-call dispatch overheads so
                     # the first measured arm isn't penalized by arm order
@@ -399,6 +415,20 @@ def check_report(results: dict, scenarios) -> None:
             assert abs(attr["fractions_sum"] - 1.0) < 0.02, \
                 (f"{name}/{arm}: fractions sum to {attr['fractions_sum']}, "
                  f"not ~1.0")
+        # speculation panel well-formedness: every arm reports counters
+        # with a sane accept rate, and the scenario-level panel carries
+        # the tuner-selected spec_k
+        for arm in ("fixed_default", "self_tuned"):
+            sp = r[arm].get("speculation")
+            assert sp is not None, f"{name}/{arm}: no speculation stats"
+            assert "accept_rate" in sp, f"{name}/{arm}: no accept_rate"
+            assert 0.0 <= sp["accept_rate"] <= 1.0, \
+                f"{name}/{arm}: accept_rate {sp['accept_rate']} outside [0,1]"
+            assert 0 <= sp["accepted"] <= sp["drafted"], \
+                (f"{name}/{arm}: accepted {sp['accepted']} vs drafted "
+                 f"{sp['drafted']}")
+        assert "speculation" in r and "spec_k_selected" in r["speculation"], \
+            f"{name}: no scenario speculation panel"
         tn = r["time_attribution"]["self_tuned"]
         assert "cost_model_calibration" in tn, \
             f"{name}: tuned attribution lacks cost-model calibration"
@@ -536,6 +566,11 @@ def main():
               f"reconfig stall "
               f"({ta.get('stall_ms_per_reconfig', 0.0):.0f} ms/reconfig)",
               flush=True)
+        sp = r["speculation"]
+        print(f"    spec    k={sp['spec_k_selected']} "
+              f"({sp['drafter']}) accept {sp['accept_rate']:.0%} "
+              f"({sp['accepted']}/{sp['drafted']} over "
+              f"{sp['spec_ticks']} spec ticks)", flush=True)
         if "warm_start_gain" in r:
             g = r["warm_start_gain"]
             print(f"    warm    {g['tokens_per_s_warm']:8.1f} tok/s "

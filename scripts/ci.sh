@@ -9,8 +9,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== docs sync (knob table vs registrations) =="
 python -m pytest -x -q tests/test_docs.py
 
-echo "== paged-attention kernel parity =="
-python -m pytest -x -q tests/test_paged_attention.py
+echo "== paged-attention kernel parity + spec-decode parity (both arms) =="
+python -m pytest -x -q tests/test_paged_attention.py tests/test_spec_decode.py
 
 echo "== tier-1 tests =="
 python -m pytest -x -q "$@"
@@ -75,6 +75,21 @@ for name, sc in rep["scenarios"].items():
         f"stall_ms_per_reconfig={tuned.get('stall_ms_per_reconfig')}"
     print(f"  {name}: stall {sf:.1%} of wall, "
           f"{tuned.get('stall_ms_per_reconfig', 0.0):.0f} ms/reconfig")
+    # speculation panel: well-formed counters (accept_rate present and in
+    # [0,1]) in every arm, and the fractions above still sum to ~1.0 with
+    # the draft/rollback categories folded in (asserted per arm already)
+    spec = sc.get("speculation")
+    assert spec is not None, f"{name}: no speculation panel"
+    assert "spec_k_selected" in spec, f"{name}: no spec_k_selected"
+    for arm in ("fixed_default", "self_tuned"):
+        sp = sc[arm]["speculation"]
+        assert "accept_rate" in sp, f"{name}/{arm}: no accept_rate"
+        assert 0.0 <= sp["accept_rate"] <= 1.0, \
+            f"{name}/{arm}: accept_rate {sp['accept_rate']} outside [0,1]"
+        assert 0 <= sp["accepted"] <= sp["drafted"], \
+            f"{name}/{arm}: accepted>{sp['drafted']} drafted"
+    print(f"  {name}: speculation k={spec['spec_k_selected']} "
+          f"accept_rate {spec['accept_rate']:.2f}")
 print(f"observability gate OK ({len(xs)} spans, "
       f"{len(rep['scenarios'])} scenario panels)")
 EOF

@@ -1,6 +1,9 @@
 """Pallas TPU paged-attention kernel (decode / chunked decode, forward).
 
-Grid: (B*H, n_table_blocks); the kv-block dimension is the innermost
+Grid: (B*H, n_visible_blocks) — the kv axis spans the host-chosen
+``ctx_cols`` visible prefix of the table (all of it when 0), so the
+engine's context bucketing shrinks the grid itself rather than skipping
+future blocks; the kv-block dimension is the innermost
 sequential ("arbitrary") axis so the online-softmax state (m, l, acc)
 lives in VMEM scratch across kv iterations — the flash_attention schedule
 applied to a *paged* cache.  The per-request block table and write
@@ -85,20 +88,25 @@ def _paged_kernel(tables_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
-                    interpret: bool = False):
+                    ctx_cols: int = 0, interpret: bool = False):
     """Attention of S query tokens per request over a paged KV cache.
 
     q: (B, S, H, hd); k_pool, v_pool: (NB, bs, K, hd) physical blocks with
     H % K == 0; block_tables: (B, MB) int32 physical block per logical
     block; pos: (B,) int32 logical position of the *first* query token
     (query j of request b sits at pos[b] + j — S=1 is single-token decode,
-    S>1 is chunked decode against a prior cache).  Returns (B, S, H, hd)
+    S>1 is chunked decode against a prior cache).  ``ctx_cols`` (static;
+    0 = all MB) bounds the visible table prefix: the kv grid axis shrinks
+    to it, so a short batch never iterates — or DMAs blocks for — table
+    columns past the host-tracked context bucket (``pl.when`` still skips
+    per-request future blocks *within* the bucket).  Returns (B, S, H, hd)
     in q.dtype.  Numerically equivalent to gathering the table into a
     dense cache and running full-softmax attention (ref.py).
     """
     B, S, H, hd = q.shape
     NB, bs, K, _ = k_pool.shape
     MB = block_tables.shape[1]
+    n_vis = min(ctx_cols, MB) if ctx_cols else MB
     G = H // K
 
     qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
@@ -114,11 +122,11 @@ def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
         return (tables_ref[b, kb], 0, h // G, 0)
 
     kernel = functools.partial(
-        _paged_kernel, sm_scale=hd ** -0.5, bs=bs, n_kb=MB, S=S, H=H)
+        _paged_kernel, sm_scale=hd ** -0.5, bs=bs, n_kb=n_vis, S=S, H=H)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B * H, MB),
+        grid=(B * H, n_vis),
         in_specs=[
             pl.BlockSpec((1, S, hd), q_index),
             pl.BlockSpec((1, bs, 1, hd), kv_index),

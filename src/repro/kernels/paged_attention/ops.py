@@ -17,8 +17,8 @@ import jax
 from repro.kernels.paged_attention.kernel import paged_attention
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("ctx_cols", "interpret"))
 def paged_attention_op(q, k_pool, v_pool, block_tables, pos, *,
-                       interpret: bool = False):
+                       ctx_cols: int = 0, interpret: bool = False):
     return paged_attention(q, k_pool, v_pool, block_tables, pos,
-                           interpret=interpret)
+                           ctx_cols=ctx_cols, interpret=interpret)

@@ -87,7 +87,8 @@ def chunked_attention(q, k, v, *, causal: bool, q_positions, kv_positions,
     return out.transpose(0, 2, 1, 3).astype(q.dtype)
 
 
-def paged_decode_attention(q, k_pool, v_pool, block_tables, *, pos):
+def paged_decode_attention(q, k_pool, v_pool, block_tables, *, pos,
+                           ctx_cols: int = 0):
     """Attention of S query tokens over a *paged* KV cache, block at a time.
 
     q: (B, S, H, hd); k_pool, v_pool: (NB, bs, K, hd) physical blocks;
@@ -96,30 +97,33 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, *, pos):
     so S=1 is single-token decode and S>1 is multi-token chunked decode,
     e.g. suffix prefill against shared prefix blocks).
 
-    The caller passes only the *visible* prefix of the block table: the
+    ``ctx_cols`` (static; 0 = all MB) is the *visible* table prefix: the
     serving engine tracks every slot's write position on the host and
     compiles the decode step per context bucket (the same shape-bucketing
     it already applies to prefill), so a short batch attends over 2 table
     columns instead of all MB — the paged-attention savings with zero
     runtime control flow.  On TPU this dispatches to the Pallas kernel in
-    kernels/paged_attention (grid over requests x KV blocks, online
-    softmax streamed across blocks in VMEM — no dense gather at all); the
-    CPU fallback gathers the visible blocks and runs one fused masked
-    attention over them (numerics identical to the full-width gather
-    path: masked tails contribute exp(-inf) = 0).
+    kernels/paged_attention, whose kv grid axis *is* the visible prefix
+    (online softmax streamed across blocks in VMEM — no dense gather at
+    all); the CPU fallback gathers the visible blocks and runs one fused
+    masked attention over them (numerics identical to the full-width
+    gather path: masked tails contribute exp(-inf) = 0).
     """
     if jax.default_backend() == "tpu":
         from repro.kernels.paged_attention import paged_attention_op
-        return paged_attention_op(q, k_pool, v_pool, block_tables, pos)
+        return paged_attention_op(q, k_pool, v_pool, block_tables, pos,
+                                  ctx_cols=ctx_cols)
 
     B, S, H, hd = q.shape
     NB, bs, K, _ = k_pool.shape
-    w = block_tables.shape[1]                # visible table columns
+    MB = block_tables.shape[1]
+    w = min(ctx_cols, MB) if ctx_cols else MB   # visible table columns
+    bt = block_tables[:, :w]
     scale = hd ** -0.5
     qf = q.astype(jnp.bfloat16)
     q_pos = pos[:, None] + jnp.arange(S)[None, :]           # (B, S)
-    kb = _repeat_kv(k_pool[block_tables].reshape(B, w * bs, K, hd), H)
-    vb = _repeat_kv(v_pool[block_tables].reshape(B, w * bs, K, hd), H)
+    kb = _repeat_kv(k_pool[bt].reshape(B, w * bs, K, hd), H)
+    vb = _repeat_kv(v_pool[bt].reshape(B, w * bs, K, hd), H)
     s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb,
                    preferred_element_type=jnp.float32) * scale
     kvp = jnp.arange(w * bs)

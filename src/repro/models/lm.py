@@ -239,10 +239,10 @@ def _attn_apply(x, p, cfg: ModelConfig, ms, knobs: ModelKnobs, positions,
             vg = v_cache[block_tables].reshape(B, MB * bs, K, hd)
             out = decode_attention(q, kg, vg, pos=pos)
         else:                               # read blocks in place (kernel)
-            bt_vis = (block_tables[:, :knobs.attn_ctx] if knobs.attn_ctx
-                      else block_tables)    # host-chosen context bucket
-            out = paged_decode_attention(q, k_cache, v_cache, bt_vis,
-                                         pos=pos)
+            # host-chosen context bucket: the kernel's kv grid axis spans
+            # only the visible table prefix (attn_ctx columns; 0 = all)
+            out = paged_decode_attention(q, k_cache, v_cache, block_tables,
+                                         pos=pos, ctx_cols=knobs.attn_ctx)
         new_kv = (k_cache, v_cache)
     else:                                   # decode: dense (B, Smax, K, hd)
         k_cache, v_cache = cache

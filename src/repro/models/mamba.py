@@ -97,8 +97,11 @@ def mamba1_block(x, p, cfg, ms=None, state=None, chunk: int = 0,
         y = jnp.einsum("bdn,bn->bd", h, C_t)
         return h, y
 
-    if state is None:
-        h0 = jnp.zeros((B, Di, N), jnp.float32)
+    if state is None or S > 1:
+        # full-sequence mode, or multi-token decode (speculative verify):
+        # the scan continues from the stashed state instead of zeros
+        h0 = (jnp.zeros((B, Di, N), jnp.float32) if state is None
+              else state["h"].astype(jnp.float32))
         seq = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
                Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2))
         h_last, ys = _scan_seq(step, h0, seq, chunk, S)
@@ -149,8 +152,10 @@ def mamba2_block(x, p, cfg, ms=None, state=None, chunk: int = 0,
         y = jnp.einsum("bhpn,bn->bhp", h, C_t)
         return h, y
 
-    if state is None:
-        h0 = jnp.zeros((B, nh, P_, N), jnp.float32)
+    if state is None or S > 1:
+        # as in mamba1: multi-token decode scans from the stashed state
+        h0 = (jnp.zeros((B, nh, P_, N), jnp.float32) if state is None
+              else state["h"].astype(jnp.float32))
         seq = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
                Cm.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3))
         h_last, ys = _scan_seq(step, h0, seq, chunk, S)

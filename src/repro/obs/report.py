@@ -24,6 +24,10 @@ CATEGORY = {
     "serve.chunk_prefill": "prefill",
     "serve.quant": "prefill",
     "serve.decode": "decode",
+    "decode.draft": "draft",           # host-side proposal cost: must stay
+                                       # a sliver of decode or spec_k loses
+    "decode.verify": "decode",         # the verify step IS the decode step
+    "decode.rollback": "rollback",     # COW-record settlement / ssm replay
     "reconfig.apply": "reconfig_other",  # self time: policy adoption,
                                          # cache readiness barrier
     "reconfig.relayout": "relayout",
@@ -42,9 +46,9 @@ CATEGORY = {
 
 # the order the fractions are reported in (and the set the bench panel
 # asserts on); categories with zero observed seconds still appear
-FRACTION_KEYS = ("decode", "prefill", "admission", "relayout", "recompile",
-                 "tuner", "reconfig_other", "migrate_bg", "recompile_bg",
-                 "other")
+FRACTION_KEYS = ("decode", "draft", "rollback", "prefill", "admission",
+                 "relayout", "recompile", "tuner", "reconfig_other",
+                 "migrate_bg", "recompile_bg", "other")
 
 # overlay categories measure work that ran on a background thread
 # *concurrently* with the foreground categories: their seconds overlap

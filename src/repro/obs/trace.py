@@ -33,6 +33,12 @@ SPAN_NAMES = {
                            "blocks (multi-token paged decode)",
     "serve.quant": "int8 re-quantization of freshly written KV rows",
     "serve.decode": "batched decode step: all live slots advance one token",
+    "decode.draft": "drafter proposes spec_k tokens per live slot "
+                    "(host-side n-gram lookup or truncated-layer forward)",
+    "decode.verify": "speculative verify: ONE batched S=spec_k+1 paged "
+                     "decode checks every draft against the target model",
+    "decode.rollback": "rejected-tail rollback: deferred-COW block "
+                       "restore (paged) or state snapshot replay (ssm)",
     "reconfig.apply": "execute a ReconfigPlan (setting adoption + warmup)",
     "reconfig.relayout": "Type I-b state-pool re-layout (live blocks/slots "
                          "relocate)",

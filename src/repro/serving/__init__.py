@@ -11,6 +11,8 @@ online: executable swaps (Type II) and block-granular state-pool re-layouts
 attention families, per-slot recurrent state for ssm/hybrid — every family
 is served by the same engine.
 """
+from repro.serving.drafter import (Drafter, NgramDrafter, TruncatedDrafter,
+                                   make_drafter)
 from repro.serving.engine import Request, ServingEngine, serve_loop
 from repro.serving.knobs import (DEFAULT_SERVING_SETTING,
                                  SERVING_RELAYOUT_KNOBS, serving_knob_space)
@@ -21,4 +23,5 @@ from repro.serving.pool import (PagedKVPool, SSMStatePool, StatePool,
 __all__ = ["Request", "ServingEngine", "serve_loop", "serving_knob_space",
            "DEFAULT_SERVING_SETTING", "SERVING_RELAYOUT_KNOBS",
            "ServingObjective", "StatePool", "PagedKVPool", "SSMStatePool",
-           "make_state_pool"]
+           "make_state_pool", "Drafter", "NgramDrafter", "TruncatedDrafter",
+           "make_drafter"]

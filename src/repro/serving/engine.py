@@ -124,6 +124,19 @@ class ServingEngine:
         self.prefill_tokens_total = 0      # tokens the prompts contained
         self.decode_time_s = 0.0           # wall time inside decode execs
         self.decode_tokens = 0             # tokens those execs produced
+        # speculative decoding (spec_k / drafter are Type II knobs: the
+        # drafter holds host token histories only, never device state)
+        self.spec_drafted = 0              # draft tokens proposed
+        self.spec_accepted = 0             # draft tokens verified-accepted
+        self.spec_ticks = 0                # speculative decode quanta
+        self._drafters: dict = {}          # drafter name -> instance
+        self._drafter_seed = 0
+        # speculative-verify executables warm lazily off the tick path:
+        # speculation is an optimisation, so a cold S > 1 executable must
+        # neither stall a tick nor gate a reconfig commit — the engine
+        # serves the plain one-token path until the background build folds
+        self._spec_warm_pending: set = set()   # keys building (or failed)
+        self._spec_warm_done: list = []        # (key, exec|None, build_s)
         self.last_reconfig_breakdown = {}  # measured per-kind s, last plan
         self.last_reconfig_scales = {}     # units migrated, last plan
         # staged (zero-downtime) reconfiguration — begin_reconfig stages a
@@ -214,8 +227,11 @@ class ServingEngine:
         need = min(last_pos // self.pool.bs + 1, self.pool.mb)
         return next(c for c in buckets if c >= need)
 
-    def _decode_exec(self, ctx_cols: int = 0):
-        key = ("decode", self.attn_impl, ctx_cols) + self.pool.exec_key()
+    def _decode_exec(self, ctx_cols: int = 0, s: int = 1):
+        """Decode executable: ``s`` query tokens per slot per call (s = 1 is
+        the classic decode step; s = spec_k + 1 is the speculative verify
+        step — one batched multi-token paged decode over draft tokens)."""
+        key = ("decode", self.attn_impl, ctx_cols, s) + self.pool.exec_key()
 
         def build():
             cfg, ms = self.cfg, self.ms
@@ -233,7 +249,7 @@ class ServingEngine:
             # AOT: compile inside the reconfig window, not mid-tick
             n = self.pool.n_slots
             cache = self.pool.decode_cache()
-            tok = jax.ShapeDtypeStruct((n, 1), jnp.int32)
+            tok = jax.ShapeDtypeStruct((n, s), jnp.int32)
             pos = jax.ShapeDtypeStruct((n,), jnp.int32)
             return aot_compile(f, self.params, cache, tok, pos)
 
@@ -252,13 +268,15 @@ class ServingEngine:
                 "nb": n_slots * mb + 1, "dtype": pool_dtype(setting),
                 "cache_dtype": setting.get("cache_dtype")}
 
-    def _decode_build_spec(self, cols: int, geom: dict):
+    def _decode_build_spec(self, cols: int, geom: dict, s: int = 1):
         """(LRU key, build fn) for the decode executable of a *future*
         paged-pool geometry.  The build closes over shapes only (operands
         are ShapeDtypeStructs), never the live pool — which is what makes
         it safe to run on the async precompile thread while the tick path
-        keeps decoding."""
-        key = ("decode", self.attn_impl, cols,
+        keeps decoding.  The key mirrors _decode_exec exactly, including
+        the query width ``s`` (speculative-verify executables are staged
+        the same way single-token ones are)."""
+        key = ("decode", self.attn_impl, cols, s,
                "paged", geom["n_slots"], geom["nb"], geom["bs"],
                geom["cache_dtype"])
         cfg, ms, params = self.cfg, self.ms, self.params
@@ -273,11 +291,11 @@ class ServingEngine:
                 return logits, new_cache
 
             shapes = lm.init_paged_cache_shapes(cfg, geom["nb"], geom["bs"])
-            cache = {k: jax.ShapeDtypeStruct(s.shape, geom["dtype"])
-                     for k, s in shapes.items()}
+            cache = {k: jax.ShapeDtypeStruct(sh.shape, geom["dtype"])
+                     for k, sh in shapes.items()}
             cache["block_tables"] = jax.ShapeDtypeStruct(
                 (geom["n_slots"], geom["mb"]), jnp.int32)
-            tok = jax.ShapeDtypeStruct((geom["n_slots"], 1), jnp.int32)
+            tok = jax.ShapeDtypeStruct((geom["n_slots"], s), jnp.int32)
             pos = jax.ShapeDtypeStruct((geom["n_slots"],), jnp.int32)
             return aot_compile(f, params, cache, tok, pos)
 
@@ -470,6 +488,108 @@ class ServingEngine:
         self.slot_req[slot] = None
         self.slot_pos[slot] = 0       # stale positions must not inflate the
         self.pool.release(slot)       # next tick's decode context bucket
+        for d in self._drafters.values():
+            d.release(slot)
+
+    # ------------------------------------------------- speculative decoding
+    @staticmethod
+    def _spec_k_of(setting: dict) -> int:
+        """Resolve the continuous ``spec_k`` knob to a draft length: the
+        tuner proposes floats in [0, 4]; the engine rounds and clamps.
+        0 = speculation off (the plain one-token decode path)."""
+        return max(0, min(int(round(float(setting.get("spec_k", 0.0)
+                                          or 0.0))), 4))
+
+    def _spec_k(self) -> int:
+        return self._spec_k_of(self.setting)
+
+    def _drafter(self):
+        name = self.setting.get("drafter", "ngram")
+        d = self._drafters.get(name)
+        if d is None:
+            from repro.serving.drafter import make_drafter
+            d = make_drafter(name, self.params, self.cfg, self.ms,
+                             vocab=self.cfg.vocab_size,
+                             seed=self._drafter_seed)
+            self._drafters[name] = d
+        return d
+
+    def reset_drafters(self, seed: int = 0):
+        """Drop all drafter state and reseed.  Bench arms call this next to
+        reset_prefix_cache() so n-gram lookup tables never leak across arms
+        and RNG-fallback draws are deterministic per scenario seed."""
+        self._drafter_seed = int(seed)
+        self._drafters = {}
+
+    def _spec_build_from_shapes(self, cols: int, s: int):
+        """(LRU key, build fn) for the *live* pool's S = ``s`` decode
+        executable.  Cache shapes are snapshotted on the caller's thread
+        (ShapeDtypeStructs only), so the returned build closure is safe to
+        run on a background thread while the tick path keeps decoding —
+        the generic-pool analogue of ``_decode_build_spec``."""
+        key = ("decode", self.attn_impl, cols, s) + self.pool.exec_key()
+        cfg, ms, params = self.cfg, self.ms, self.params
+        n = self.pool.n_slots
+        cache = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            self.pool.decode_cache())
+        kn = ModelKnobs(attn_impl=self.attn_impl, attn_ctx=cols)
+
+        def build():
+            def f(params, cache, tok, pos):
+                logits, new_cache = lm.decode_step(params, cache, tok, pos,
+                                                   cfg, ms, kn)
+                new_cache = jax.tree_util.tree_map(
+                    lambda nw, o: nw.astype(o.dtype), new_cache, cache)
+                return logits, new_cache
+
+            tok = jax.ShapeDtypeStruct((n, s), jnp.int32)
+            pos = jax.ShapeDtypeStruct((n,), jnp.int32)
+            return aot_compile(f, params, cache, tok, pos)
+
+        return key, build
+
+    def _spec_exec_ready(self, cols: int, s: int) -> bool:
+        """True when the S = ``s`` speculative-verify executable for this
+        context bucket is warm.  On a miss: build inline when
+        ``async_precompile`` is off (tests), else kick one daemon build
+        thread per key and report not-ready — the tick falls back to the
+        plain one-token decode until the build folds, so a spec_k flip
+        commits instantly (Type II) and never pays a mid-tick compile.  A
+        failed build leaves its key parked in ``_spec_warm_pending``:
+        speculation stays off for that shape instead of retrying a
+        deterministic compile failure every tick."""
+        key = ("decode", self.attn_impl, cols, s) + self.pool.exec_key()
+        if key in self._steps:
+            return True
+        if not self.async_precompile:
+            self._decode_exec(cols, s)
+            return True
+        if key not in self._spec_warm_pending:
+            self._spec_warm_pending.add(key)
+            _, build = self._spec_build_from_shapes(cols, s)
+            out = self._spec_warm_done
+
+            def worker():
+                t0 = time.perf_counter()
+                try:
+                    ex = build()
+                except Exception:
+                    ex = None
+                out.append((key, ex, time.perf_counter() - t0))
+
+            threading.Thread(target=worker, daemon=True).start()
+        return False
+
+    def _fold_spec_warm(self):
+        """Absorb finished background spec-executable builds (tick path;
+        list.append/pop are atomic under the GIL)."""
+        while self._spec_warm_done:
+            key, ex, dur = self._spec_warm_done.pop()
+            if ex is not None:
+                self._spec_warm_pending.discard(key)
+                self._steps.absorb(key, ex, dur)
+                self.tr.record("exec.precompile_bg", dur, key=str(key))
 
     # ---------------------------------------------------------------- tick
     def step(self, now: float | None = None) -> dict:
@@ -510,36 +630,54 @@ class ServingEngine:
             tokens += 1
             budget -= 1
 
-        # decode: advance every live slot by one token.  The executable is
-        # picked per context bucket: the batch's highest write position
-        # (host state) decides how many block-table columns the paged
-        # attention reads — short batches never touch dead tail blocks
+        # decode: advance every live slot.  With spec_k == 0 each slot
+        # moves one token per quantum; with spec_k > 0 the drafter proposes
+        # k tokens per slot and ONE multi-token paged decode verifies them
+        # (speculative greedy decoding — output is token-for-token the
+        # plain greedy output).  The executable is picked per context
+        # bucket: the batch's highest write position (host state) decides
+        # how many block-table columns the paged attention reads — short
+        # batches never touch dead tail blocks
         if self.n_active > 0:
             active = [i for i, r in enumerate(self.slot_req) if r is not None]
-            self.pool.prepare_step_writes(active, self.slot_pos)
-            tok = jnp.asarray(self.slot_tok[:, None])
-            pos = jnp.asarray(self.slot_pos)
-            cols = self._ctx_cols(int(self.slot_pos[active].max()))
-            with self.tr.span("serve.decode", batch=len(active), cols=cols):
-                t_dec = time.perf_counter()
-                logits, new_cache = self._decode_exec(cols)(
-                    self.params, self.pool.decode_cache(), tok, pos)
-                jax.block_until_ready(logits)
-                self.decode_time_s += time.perf_counter() - t_dec
-                self.decode_tokens += len(active)
-            self.pool.set_cache(new_cache)
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-            for slot, req in enumerate(self.slot_req):
-                if req is None:
-                    continue
-                self.slot_pos[slot] += 1
-                self.slot_tok[slot] = nxt[slot]
-                req.tokens_out.append(int(nxt[slot]))
-                tokens += 1
-                self.total_tokens += 1
-                if (len(req.tokens_out) >= req.max_new
-                        or self.slot_pos[slot] >= self.max_seq - 1):
-                    self._complete(slot)
+            self._fold_spec_warm()
+            k = self._spec_k()
+            if k > 0:
+                # speculate only once the verify executable is warm; a
+                # cold one builds in the background while this tick (and
+                # the next few) take the plain path below
+                cols = self._ctx_cols(int(self.slot_pos[active].max()) + k)
+                if not self._spec_exec_ready(cols, k + 1):
+                    k = 0
+            if k > 0:
+                tokens += self._spec_decode(active, k)
+            else:
+                self.pool.prepare_step_writes(active, self.slot_pos)
+                tok = jnp.asarray(self.slot_tok[:, None])
+                pos = jnp.asarray(self.slot_pos)
+                cols = self._ctx_cols(int(self.slot_pos[active].max()))
+                with self.tr.span("serve.decode", batch=len(active),
+                                  cols=cols):
+                    t_dec = time.perf_counter()
+                    logits, new_cache = self._decode_exec(cols)(
+                        self.params, self.pool.decode_cache(), tok, pos)
+                    jax.block_until_ready(logits)
+                    self.decode_time_s += time.perf_counter() - t_dec
+                    self.decode_tokens += len(active)
+                self.pool.set_cache(new_cache)
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1),
+                                 np.int32)
+                for slot, req in enumerate(self.slot_req):
+                    if req is None:
+                        continue
+                    self.slot_pos[slot] += 1
+                    self.slot_tok[slot] = nxt[slot]
+                    req.tokens_out.append(int(nxt[slot]))
+                    tokens += 1
+                    self.total_tokens += 1
+                    if (len(req.tokens_out) >= req.max_new
+                            or self.slot_pos[slot] >= self.max_seq - 1):
+                        self._complete(slot)
 
         # staged reconfiguration: fold finished precompiles, copy one
         # background-migration batch, commit when warm + fully copied
@@ -568,6 +706,126 @@ class ServingEngine:
         return {"dt": dt, "tokens": tokens, "active": self.n_active,
                 "queued": self.queue_depth, "load": self.load,
                 "idle": tokens == 0 and not self.has_work()}
+
+    def _spec_decode(self, active: list, k: int) -> int:
+        """One speculative decode quantum: draft k tokens per live slot,
+        verify all of them in ONE batched S = k+1 paged decode against the
+        target model, commit the accepted prefix plus the target's own
+        next token, and roll the rejected tail back.
+
+        Greedy parity by construction: token j is emitted only if it is
+        the target argmax at its position given the previously committed
+        tokens (the accept loop stops at the first draft mismatch, and the
+        token emitted there is the target argmax itself).  KV rows for
+        rejected positions were written during verify, but decode always
+        writes rows in-step before attention reads them and masking is
+        kvp <= qp, so stale rows are overwritten before any query can see
+        them — rollback only has to restore *pool bookkeeping*: for paged
+        pools the deferred-COW records (shared blocks must not be copied
+        away from their prefix-cache key by a rejected write), for ssm
+        pools the recurrent state (snapshot + replay of accepted tokens).
+        """
+        S = k + 1
+        drafter = self._drafter()
+        tok = np.zeros((self.n_slots, S), np.int32)
+        with self.tr.span("decode.draft", batch=len(active), k=k,
+                          drafter=drafter.name):
+            for s in active:
+                req = self.slot_req[s]
+                drafter.update(s, req.rid, req.prompt, req.tokens_out)
+                tok[s, 0] = self.slot_tok[s]
+                tok[s, 1:] = drafter.propose(s, k)
+        self.spec_ticks += 1
+        self.spec_drafted += k * len(active)
+
+        pos0 = self.slot_pos.copy()          # pre-tick write positions
+        recs = {}
+        state_old = None
+        if self.pool.kind == "paged":
+            # COW over the whole speculative write range [P, P+S), with
+            # shared-block releases DEFERRED so the rollback can restore
+            # the original block when the write turns out rejected
+            for s in active:
+                p = int(pos0[s])
+                recs[s] = self.pool.prepare_spec_write(
+                    s, p, min(p + S, self.max_seq))
+        else:
+            state_old = self.pool.decode_cache()   # functional snapshot
+
+        cols = self._ctx_cols(int(pos0[active].max()) + k)
+        with self.tr.span("decode.verify", batch=len(active), cols=cols,
+                          s=S):
+            t_dec = time.perf_counter()
+            logits, new_cache = self._decode_exec(cols, S)(
+                self.params, self.pool.decode_cache(), jnp.asarray(tok),
+                jnp.asarray(pos0))
+            jax.block_until_ready(logits)
+            self.decode_time_s += time.perf_counter() - t_dec
+        self.pool.set_cache(new_cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)   # (n, S)
+
+        emitted = 0
+        accepted_len = {}                    # slot -> tokens emitted (a+1)
+        done = []
+        for s in active:
+            req = self.slot_req[s]
+            p = int(pos0[s])
+            # emission cap: never emit past max_new, and keep the next
+            # write position below max_seq - 1 (the submit-time contract)
+            cap = min(req.max_new - len(req.tokens_out),
+                      self.max_seq - 1 - p)
+            a = 0
+            while a < k and a + 1 < cap and tok[s, a + 1] == nxt[s, a]:
+                a += 1
+            for j in range(a + 1):
+                req.tokens_out.append(int(nxt[s, j]))
+            self.spec_accepted += a
+            emitted += a + 1
+            self.total_tokens += a + 1
+            self.decode_tokens += a + 1
+            accepted_len[s] = a + 1
+            self.slot_pos[s] = p + a + 1
+            self.slot_tok[s] = nxt[s, a]
+            if (len(req.tokens_out) >= req.max_new
+                    or self.slot_pos[s] >= self.max_seq - 1):
+                done.append(s)
+
+        with self.tr.span("decode.rollback", batch=len(active)):
+            if self.pool.kind == "paged":
+                # must run before _complete: release() frees the slot's
+                # blocks, and the deferred-COW decrements settle refcounts
+                for s in active:
+                    self.pool.commit_spec_write(
+                        s, recs[s], int(pos0[s]) + accepted_len[s])
+            else:
+                self._ssm_replay(active, accepted_len, state_old, tok,
+                                 pos0, S)
+        for s in done:
+            self._complete(s)
+        return emitted
+
+    def _ssm_replay(self, active, accepted_len, state_old, tok, pos0, S):
+        """Recurrent-state rollback: snapshot + replay.  Slots that
+        accepted the full draft keep the verify step's final state; every
+        other slot's state is recomputed from the pre-tick snapshot by
+        re-running exactly its accepted tokens, batched per distinct
+        accepted length (ssm pools bucket context at 0, so each length is
+        at most one extra executable, L in 1..k)."""
+        partial = sorted({accepted_len[s] for s in active
+                          if accepted_len[s] < S})
+        if not partial:
+            return
+        cur = self.pool.decode_cache()
+        pos = jnp.asarray(pos0)
+        for L in partial:
+            slots = [s for s in active if accepted_len[s] == L]
+            _, st = self._decode_exec(0, L)(
+                self.params, state_old, jnp.asarray(tok[:, :L]), pos)
+            idx = jnp.asarray(slots)
+            for leaf in cur:      # every ssm/hybrid leaf has slot on axis 1
+                cur[leaf] = cur[leaf].at[:, idx].set(
+                    st[leaf][:, idx].astype(cur[leaf].dtype))
+        self.pool.set_cache(cur)
 
     # ------------------------------------------------------------ reconfig
     def warm_start(self, space=None, max_prompt: int | None = None):
@@ -602,7 +860,10 @@ class ServingEngine:
         # (decode is warmed per context bucket, <= 6 per pool geometry;
         # shared-prefix chunk prefill per (pool geometry, length bucket))
         geoms = len(mbs) * len(cds) * len(bss)
-        planned = (geoms * 6
+        # spec_k is continuous (current-value-only here); a nonzero current
+        # value needs the S = k+1 verify executable per context bucket too
+        spec_s = self._spec_k_of(save_setting) + 1
+        planned = (geoms * 6 * (2 if spec_s > 1 else 1)
                    + len(kcs) * len(buckets)
                    + (geoms * len(buckets) if share else 0)
                    + (len(buckets) if "int8" in values.get("quant", ())
@@ -618,6 +879,8 @@ class ServingEngine:
                         self.cfg, self.setting, self.max_seq, self.ms)
                     for cols in self._ctx_buckets():
                         self._decode_exec(cols)
+                        if spec_s > 1:
+                            self._decode_exec(cols, spec_s)
                     if share:
                         for b in buckets:
                             self._chunk_prefill_exec(b)
@@ -667,7 +930,9 @@ class ServingEngine:
             else:
                 self.pool.update_policy(self.setting)    # policy knobs
             # warm the hot-path executables for the new setting (SSR): every
-            # context bucket, so no decode tick pays a cold compile
+            # context bucket, so no decode tick pays a cold compile (the
+            # speculative-verify width warms lazily via _spec_exec_ready —
+            # it must not stretch the synchronous reconfig window)
             for cols in self._ctx_buckets():
                 self._decode_exec(cols)
             jax.block_until_ready(self.pool.decode_cache())
@@ -760,6 +1025,10 @@ class ServingEngine:
         specs = []
         if self.pool.kind == "paged" and self.attn_impl != "gather":
             geom = self._target_geometry(target)
+            # only the S=1 executables gate the commit; a speculating
+            # target's S = k+1 verify executables warm lazily *after* the
+            # flip (_spec_exec_ready) — a spec_k change is Type II and
+            # must never hold a plan pending behind cold compiles
             for cols in self._ctx_buckets_for(geom["mb"]):
                 key, build = self._decode_build_spec(cols, geom)
                 if key not in self._steps:
@@ -977,6 +1246,9 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
     pt0 = engine.prefill_tokens_total
     dt0 = engine.decode_time_s
     dk0 = engine.decode_tokens
+    sd0 = engine.spec_drafted
+    sa0 = engine.spec_accepted
+    st0 = engine.spec_ticks
     sh0 = engine.pool.shared_blocks_hit
     cow0 = engine.pool.cow_copies
     t_start = time.perf_counter()
@@ -1084,6 +1356,16 @@ def serve_loop(engine: ServingEngine, trace, tuner=None, *,
         # state (hit/miss/build-time — Type II swap warmth in one line)
         "pool": engine.pool.snapshot(),
         "exec_cache": engine._steps.stats(),
+    }
+    drafted = engine.spec_drafted - sd0
+    stats["speculation"] = {
+        "drafted": drafted,
+        "accepted": engine.spec_accepted - sa0,
+        "spec_ticks": engine.spec_ticks - st0,
+        "accept_rate": ((engine.spec_accepted - sa0) / drafted
+                        if drafted else 0.0),
+        "spec_k": engine._spec_k(),
+        "drafter": engine.setting.get("drafter", "ngram"),
     }
     if tuner is not None:
         # init-phase spend + fleet-store warm-start provenance: the bench's

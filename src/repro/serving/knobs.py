@@ -56,6 +56,12 @@ def serving_knob_space(max_batch_ceiling: int = 8,
         Knob("k_chunk", "ordinal", (128, 256)),
         Knob("cache_dtype", "nominal", ("bf16", "f32")),
         Knob("admit_budget", "continuous", (0.5, 4.0)),
+        # speculative decoding: spec_k drafts per verify step (the engine
+        # rounds/clamps; 0 = off) and which Drafter proposes them.  Both
+        # are Type II — drafters keep host token histories only, and the
+        # S = spec_k+1 verify executable is just another LRU entry.
+        Knob("spec_k", "continuous", (0.0, 4.0)),
+        Knob("drafter", "nominal", ("ngram", "truncated")),
     ]
     if family in PAGED_FAMILIES:
         knobs += [
@@ -79,4 +85,6 @@ DEFAULT_SERVING_SETTING = {
     "prefix_share": False,
     "admit_budget": 1.0,
     "block_overcommit": 1.0,
+    "spec_k": 0.0,
+    "drafter": "ngram",
 }

@@ -263,6 +263,67 @@ class PagedKVPool(StatePool):
             self._free.add(block)
             self._rebalance_budget()    # a shrunk budget reclaims releases
 
+    # ------------------------------------------------------------ invariants
+    def check_invariants(self):
+        """Assert the pool's full accounting is self-consistent:
+
+          * refcount conservation — every block's refcount equals the
+            number of live table references holding it, and unreferenced
+            blocks have refcount 0;
+          * free-list / table-entry / reserved-set disjointness, and the
+            three sets plus held blocks partition the physical range;
+          * overcommit-budget accounting at ``_rebalance_budget``'s fixed
+            point (held + free == budget, or free drained when live data
+            outgrew a shrunk budget);
+          * every prefix-cache key resolves back to its block.
+
+        O(n_slots x table_width) host work — for tests and debugging, not
+        the hot path."""
+        counts: dict[int, int] = {}
+        for slot, live in enumerate(self.slot_live):
+            blocks = self.slot_blocks[slot]
+            if not live:
+                assert blocks == [], \
+                    f"dead slot {slot} still holds blocks {blocks}"
+                assert all(b == TRASH_BLOCK for b in self.tables[slot]), \
+                    f"dead slot {slot} has live table entries"
+                continue
+            for lb, b in enumerate(blocks):
+                assert b != TRASH_BLOCK, \
+                    f"slot {slot} tabled the trash block at {lb}"
+                assert self.tables[slot, lb] == b, \
+                    f"slot {slot} lb {lb}: table {self.tables[slot, lb]} " \
+                    f"!= slot_blocks {b}"
+                counts[b] = counts.get(b, 0) + 1
+            for lb in range(len(blocks), self.mb):
+                assert self.tables[slot, lb] == TRASH_BLOCK, \
+                    f"slot {slot}: stale table entry past its blocks at {lb}"
+        for b, n in counts.items():
+            assert self.ref[b] == n, f"block {b}: ref {self.ref[b]} != {n}"
+        for b in range(1, self.nb):
+            if b not in counts:
+                assert self.ref[b] == 0, \
+                    f"block {b}: ref {self.ref[b]} with no table reference"
+        held = {b for b in range(1, self.nb)
+                if self.ref[b] > 0 or b in self.block_key}
+        assert not (held & self._free), "free list overlaps held blocks"
+        assert not (held & self._reserved), "reserved set overlaps held"
+        assert not (self._free & self._reserved), "free/reserved overlap"
+        assert held | self._free | self._reserved == set(range(1, self.nb)), \
+            "block leak: some physical block is in no accounting set"
+        target = self.usable_blocks()
+        if len(held) <= target:
+            assert len(held) + len(self._free) == target, \
+                f"budget: held {len(held)} + free {len(self._free)} " \
+                f"!= target {target}"
+        else:
+            assert not self._free, \
+                f"budget: held {len(held)} > target {target} with a " \
+                f"non-empty free list"
+        for key, b in self.prefix.items():
+            assert self.block_key.get(b) == key, \
+                f"prefix key {key} -> block {b} does not resolve back"
+
     # ------------------------------------------------------------- admission
     def blocks_needed(self, prompt_len: int, max_new: int) -> int:
         tokens = min(prompt_len + max_new, self.max_seq)
@@ -363,6 +424,50 @@ class PagedKVPool(StatePool):
             self.tables[slot, lb] = nb
             self.slot_blocks[slot][lb] = nb
             self.cow_copies += 1
+
+    def prepare_spec_write(self, slot: int, start: int, end: int):
+        """Copy-on-write for a *speculative* write range [start, end).
+
+        Like ``prepare_write``, but the shared block's refcount drop is
+        deferred: rolling a rejected tail back must restore the original
+        block, and an eager decrement could free it (or hand it to another
+        request) mid-tick.  Returns rollback records
+        ``[(logical_block, old_physical, new_physical), ...]`` that
+        ``commit_spec_write`` settles after the verify step."""
+        recs = []
+        for lb in range(start // self.bs, -(-end // self.bs)):
+            b = int(self.tables[slot, lb])
+            self._mig_mark(b)     # caller writes [start, end) after this
+            if self.ref[b] <= 1:
+                continue
+            nb = self._alloc_block()
+            assert nb is not None, "COW block reserved at admission"
+            for k in self.kv:
+                self.kv[k] = self.kv[k].at[:, nb].set(self.kv[k][:, b])
+            self.ref[nb] = 1
+            # ref[b] is NOT decremented here — commit_spec_write settles
+            # it: release on keep, restore on rollback
+            self.tables[slot, lb] = nb
+            self.slot_blocks[slot][lb] = nb
+            self.cow_copies += 1
+            recs.append((lb, b, nb))
+        return recs
+
+    def commit_spec_write(self, slot: int, recs, accepted_end: int):
+        """Settle a speculative write's COW records: a copy covering any
+        accepted position (block start < ``accepted_end``) is kept and the
+        old shared block finally dropped; a copy covering only rejected
+        positions is undone — the table entry is restored and the private
+        copy freed.  Rejected rows need no scrubbing: every decode step
+        re-resolves COW and rewrites its KV rows in-step before attention
+        reads them, and attention masks ``kvp <= q_pos``."""
+        for lb, old, new in recs:
+            if lb * self.bs < accepted_end:
+                self._release_block(old)      # the deferred decrement
+            else:
+                self.tables[slot, lb] = old
+                self.slot_blocks[slot][lb] = old
+                self._release_block(new)      # 1 -> 0: back to free list
 
     def write_kv(self, slot: int, kv: dict, start: int):
         """Scatter per-token KV rows (L, n, K, hd) into the slot's blocks

@@ -153,7 +153,8 @@ def test_architecture_doc_exists_and_linked():
     with open(arch) as f:
         text = f.read()
     for concept in ("Type II", "Type I-b", "ODMR", "paged_attention",
-                    "StatePool", "TuningManager", "drift"):
+                    "StatePool", "TuningManager", "drift", "spec_k",
+                    "Drafter", "speculative"):
         assert concept in text, f"ARCHITECTURE.md lost {concept!r}"
     with open(os.path.join(os.path.dirname(DOC), "..", "README.md")) as f:
         readme = f.read()

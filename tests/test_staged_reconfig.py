@@ -23,7 +23,6 @@ from repro.core.tuner import TunerConfig, TuningManager
 from repro.models import lm
 from repro.serving import (DEFAULT_SERVING_SETTING, SERVING_RELAYOUT_KNOBS,
                            Request, ServingEngine, serve_loop)
-from repro.serving.pool import TRASH_BLOCK
 
 
 @pytest.fixture(scope="module")
@@ -76,31 +75,6 @@ def _logical_kv(engine):
     return out
 
 
-def _check_pool_invariants(pool):
-    """Refcounts equal table references; every physical block is exactly
-    one of {held, free, reserved, trash}; cached prefix blocks resolve."""
-    counts = {}
-    for slot, live in enumerate(pool.slot_live):
-        blocks = pool.slot_blocks[slot]
-        if not live:
-            assert blocks == []
-            continue
-        for lb, b in enumerate(blocks):
-            assert b != TRASH_BLOCK
-            assert pool.tables[slot, lb] == b
-            counts[b] = counts.get(b, 0) + 1
-    for b, n in counts.items():
-        assert pool.ref[b] == n, f"block {b}: ref {pool.ref[b]} != {n}"
-    held = {b for b in range(1, pool.nb)
-            if pool.ref[b] > 0 or b in pool.block_key}
-    assert not (held & pool._free)
-    assert not (held & pool._reserved)
-    assert not (pool._free & pool._reserved)
-    assert held | pool._free | pool._reserved == set(range(1, pool.nb))
-    for key, b in pool.prefix.items():
-        assert pool.block_key.get(b) == key
-
-
 # -------------------------------------------------- pool-level migration
 
 def test_background_migration_preserves_logical_kv(dense_model):
@@ -144,7 +118,7 @@ def test_background_migration_preserves_logical_kv(dense_model):
         eng.slot_pos[new] = old_pos[old]
         eng.slot_tok[new] = old_tok[old]
 
-    _check_pool_invariants(eng.pool)
+    eng.pool.check_invariants()
     assert eng.pool.n_slots == 4
     after = _logical_kv(eng)
     slot_map = {s: mapping[s] for s in before}
@@ -195,7 +169,7 @@ def test_migration_refuses_undrained_shrink(dense_model):
         eng.pool.migration_step(max_blocks=8)
     assert eng.pool.finish_migration(eng._live_extents()) is None
     eng.pool.abort_migration()
-    _check_pool_invariants(eng.pool)
+    eng.pool.check_invariants()
     while eng.has_work():
         eng.step()
     assert all(len(r.tokens_out) == r.max_new for r in eng.finished)
@@ -247,7 +221,7 @@ def test_engine_staged_reconfig_no_token_loss(dense_model):
     assert ev["plan"] is p and ev["cost_s"] >= 0.0
     assert ev["bg_blocks"] > 0        # migration really ran in batches
     assert eng.setting["max_batch"] == 4 and eng.pool.n_slots == 4
-    _check_pool_invariants(eng.pool)
+    eng.pool.check_invariants()
 
     while eng.has_work():
         eng.step()
@@ -304,7 +278,7 @@ def test_engine_cancel_staged_restores_incumbent(dense_model):
     got = eng.cancel_staged()
     assert got is p and eng._staged is None
     assert eng.pool._mig is None and eng.pool.n_slots == 2
-    _check_pool_invariants(eng.pool)
+    eng.pool.check_invariants()
     while eng.has_work():
         eng.step()
     assert all(len(r.tokens_out) == r.max_new for r in eng.finished)

@@ -10,9 +10,7 @@ from repro.configs.registry import get_config
 from repro.core.reconfig import plan
 from repro.models import lm
 from repro.serving import (DEFAULT_SERVING_SETTING, SERVING_RELAYOUT_KNOBS,
-                           PagedKVPool, Request, ServingEngine, SSMStatePool,
-                           serve_loop)
-from repro.serving.pool import TRASH_BLOCK
+                           Request, ServingEngine, SSMStatePool, serve_loop)
 
 
 @pytest.fixture(scope="module")
@@ -50,30 +48,6 @@ def _reference_tokens(params, cfg, req, max_seq=48):
     return eng.finished[0].tokens_out
 
 
-def _check_tables(pool: PagedKVPool):
-    """Structural block-table invariants: live slots reference allocated
-    blocks; refcounts equal the number of table references (+cache pins are
-    refcount-0 entries); the trash block is never owned."""
-    counts = {}
-    for slot, live in enumerate(pool.slot_live):
-        blocks = pool.slot_blocks[slot]
-        if not live:
-            assert blocks == []
-            assert all(b == TRASH_BLOCK for b in pool.tables[slot])
-            continue
-        assert len(blocks) >= 1
-        for lb, b in enumerate(blocks):
-            assert b != TRASH_BLOCK
-            assert pool.tables[slot, lb] == b
-            counts[b] = counts.get(b, 0) + 1
-    for b, n in counts.items():
-        assert pool.ref[b] == n, f"block {b}: ref {pool.ref[b]} != {n} users"
-    # every cached (prefix) block exists and is not on the free list
-    for key, b in pool.prefix.items():
-        assert pool.block_key.get(b) == key
-        assert b not in pool._free
-
-
 # ---------------------------------------------------------------- paged pool
 
 def test_block_tables_consistent_after_relayouts(dense_model):
@@ -88,18 +62,18 @@ def test_block_tables_consistent_after_relayouts(dense_model):
     for _ in range(3):
         eng.step()
     assert eng.n_active == 2
-    _check_tables(eng.pool)
+    eng.pool.check_invariants()
     for new in (_setting(max_batch=4, block_size=16, prefix_share=True),
                 _setting(max_batch=3, block_size=8, prefix_share=True)):
         p = plan(eng.setting, new, mesh_knobs=SERVING_RELAYOUT_KNOBS)
         assert "I-b" in p.kinds
         eng.apply_plan(p)
-        _check_tables(eng.pool)
+        eng.pool.check_invariants()
         for _ in range(2):
             eng.step()
     while eng.has_work():
         eng.step()
-    _check_tables(eng.pool)
+    eng.pool.check_invariants()
     assert len(eng.finished) == 6
     for r in eng.finished:
         assert len(r.tokens_out) == r.max_new            # no token lost
@@ -125,7 +99,7 @@ def test_prefix_sharing_refcount_and_cow(dense_model):
     pool = eng.pool
     assert pool.shared_blocks_hit >= 4          # 2 full blocks x 2 followers
     assert pool.cow_copies >= 2                 # block-aligned full match
-    _check_tables(pool)
+    pool.check_invariants()
     # the two prompt blocks of the first request are shared by later ones
     shared_refs = [int(pool.ref[b]) for b in pool.slot_blocks[0][:2]]
     assert any(r >= 2 for r in shared_refs)
